@@ -1,0 +1,68 @@
+"""Compression-kernel microbenchmark: us/call of the Pallas kernels
+(interpret mode on CPU — structural check + empirical omega; TPU wall-times
+come from the same entry points with interpret=False) vs their jnp oracles."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.qsgd import qsgd_blocks
+from repro.kernels.sign_topk import BLOCK, sign_topk_blocks
+
+
+def _time(fn, *args, reps=20):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run_bench(quick: bool = True) -> List[Dict]:
+    rows = []
+    nb = 64 if quick else 1024  # 64 KiB-ish to 1 MiB-ish shards
+    key = jax.random.PRNGKey(0)
+    xh = jax.random.normal(key, (nb, BLOCK))
+    xe = 0.5 * jax.random.normal(jax.random.fold_in(key, 1), (nb, BLOCK))
+    k_b = 102  # ~10%
+
+    t_kernel = _time(lambda a, b: sign_topk_blocks(a, b, jnp.float32(1.0), k_b),
+                     xh, xe)
+    t_ref = _time(lambda a, b: ref.sign_topk_ref(
+        a.reshape(-1), b.reshape(-1), jnp.float32(1.0), k_b), xh, xe)
+    q, _, _, _ = ref.sign_topk_ref(xh.reshape(-1), xe.reshape(-1),
+                                   jnp.float32(1.0), k_b)
+    diff = xh.reshape(-1) - xe.reshape(-1)
+    omega_emp = 1.0 - float(jnp.sum((diff - q) ** 2) / jnp.sum(diff ** 2))
+    rows.append({"name": "kernel_sign_topk(interp)", "us_per_call": round(t_kernel, 1),
+                 "ref_us": round(t_ref, 1), "omega_empirical": round(omega_emp, 4),
+                 "numel": nb * BLOCK})
+
+    u = jax.random.uniform(jax.random.fold_in(key, 2), (nb, BLOCK))
+    t_q = _time(lambda a, b: qsgd_blocks(a, b, s=16), xh, u)
+    t_qr = _time(lambda a, b: ref.qsgd_ref(a.reshape(-1), b.reshape(-1), 16),
+                 xh, u)
+    yq = ref.qsgd_ref(xh.reshape(-1), u.reshape(-1), 16)
+    omega_q = 1.0 - float(jnp.sum((xh.reshape(-1) - yq) ** 2)
+                          / jnp.sum(xh.reshape(-1) ** 2))
+    rows.append({"name": "kernel_qsgd(interp)", "us_per_call": round(t_q, 1),
+                 "ref_us": round(t_qr, 1), "omega_empirical": round(omega_q, 4),
+                 "numel": nb * BLOCK})
+
+    flat = xh.reshape(-1)
+    t_f = _time(lambda a, b: ops.trigger_compress_update(
+        a, b, jnp.float32(0.0), k_b), flat, xe.reshape(-1))
+    rows.append({"name": "kernel_fused_trigger(interp)",
+                 "us_per_call": round(t_f, 1), "ref_us": round(t_kernel + t_ref, 1),
+                 "omega_empirical": round(omega_emp, 4), "numel": nb * BLOCK})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run_bench(quick=True):
+        print(r)

@@ -1,0 +1,106 @@
+"""Aggregate the dry-run JSON artifacts (results/dryrun_*.json) into the
+EXPERIMENTS.md §Roofline table: per (arch x shape x mesh) the three terms,
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs ratio, and footprint."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+FIX_HINTS = {
+    "compute_s": "raise arithmetic intensity: bigger per-device batch or "
+                 "fewer remat recomputes",
+    "memory_s": "cut HBM traffic: fuse gossip ops (Pallas kernel), bf16 "
+                "params, larger loss chunks",
+    "collective_s": "cut gossip/TP bytes: ring ppermute gossip, compressed "
+                    "payloads, shard activations to kill all-gathers",
+}
+
+
+def load_rows() -> List[Dict]:
+    """Later generations override earlier ones per (arch, shape, mesh):
+    baseline dryrun_* < *_fix < serve2/train2 re-baselines."""
+    def gen(fname):
+        b = os.path.basename(fname)
+        if "train3" in b or "decode3" in b:
+            return 3
+        if "serve2" in b or "train2" in b:
+            return 2
+        if "fix" in b:
+            return 1
+        return 0
+
+    files = sorted(glob.glob(os.path.join(RESULTS_DIR, "dryrun_*.json")),
+                   key=lambda f: (gen(f), f))
+    merged: Dict[tuple, Dict] = {}
+    for f in files:
+        with open(f) as fh:
+            for r in json.load(fh):
+                merged[(r.get("arch"), r.get("shape"), r.get("mesh"))] = r
+    return list(merged.values())
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b / 2**30:.2f}GiB"
+
+
+def table(rows: List[Dict], mesh: str = "16x16") -> str:
+    out = ["| arch | shape | step | compute_s | memory_s | collective_s | "
+           "dominant | useful_flops | temp/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("mesh") != mesh or not r.get("ok"):
+            continue
+        uf = r.get("useful_flops_ratio")
+        uf_s = f"{uf:.2f}" if uf else "-"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('step','-')} "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | {r['dominant'].replace('_s','')} "
+            f"| {uf_s} | {fmt_bytes(r['memory'].get('temp_bytes'))} |")
+    return "\n".join(out)
+
+
+def run_bench(quick: bool = True) -> List[Dict]:
+    """Benchmark-harness entry: summarizes whatever dry-run artifacts exist."""
+    rows = load_rows()
+    ok = [r for r in rows if r.get("ok")]
+    summary = []
+    for r in ok:
+        summary.append({
+            "name": f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+            "us_per_call": round(max(r["compute_s"], r["memory_s"],
+                                     r["collective_s"]) * 1e6, 1),
+            "dominant": r["dominant"],
+            "compute_s": f"{r['compute_s']:.3e}",
+            "memory_s": f"{r['memory_s']:.3e}",
+            "collective_s": f"{r['collective_s']:.3e}",
+        })
+    if not summary:
+        summary.append({"name": "roofline_no_artifacts", "us_per_call": 0,
+                        "note": "run src/repro/launch/dryrun.py first"})
+    return summary
+
+
+def main():
+    rows = load_rows()
+    nfail = [r for r in rows if not r.get("ok")]
+    print(f"{len(rows)} dry-run rows, {len(nfail)} failures")
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n## mesh {mesh}\n")
+        print(table(rows, mesh))
+    if nfail:
+        print("\nFailures:")
+        for r in nfail:
+            print(f"  {r['arch']} {r['shape']} {r['mesh']}: "
+                  f"{r.get('error', '')[:200]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Benchmark driver — one suite per paper table/figure.
+
+  bench_convex     -> Figure 1a/1b (convex; loss vs rounds and vs bits)
+  bench_nonconvex  -> Figure 1c/1d (non-convex LM; loss vs bits, momentum)
+  bench_ablation   -> Remark 4 (H / omega / trigger ablations)
+  bench_kernels    -> compression hot-spot kernels (us/call + empirical omega)
+  roofline         -> §Roofline summary from dry-run artifacts
+
+Prints ``name,us_per_call,derived`` CSV. ``--full`` runs paper-scale settings.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--suite", default="all",
+                    choices=["all", "convex", "nonconvex", "ablation",
+                             "topology", "kernels", "roofline"])
+    args = ap.parse_args(argv)
+    quick = not args.full
+
+    from benchmarks import (bench_ablation, bench_convex, bench_kernels,
+                            bench_nonconvex, bench_topology, roofline)
+    suites = {
+        "convex": bench_convex.run_bench,
+        "nonconvex": bench_nonconvex.run_bench,
+        "ablation": bench_ablation.run_bench,
+        "topology": bench_topology.run_bench,
+        "kernels": bench_kernels.run_bench,
+        "roofline": roofline.run_bench,
+    }
+    if args.suite != "all":
+        suites = {args.suite: suites[args.suite]}
+
+    print("name,us_per_call,derived")
+    for sname, fn in suites.items():
+        try:
+            rows = fn(quick=quick)
+        except Exception as e:  # pragma: no cover - report and continue
+            print(f"{sname}_ERROR,0,\"{type(e).__name__}: {e}\"")
+            continue
+        for r in rows:
+            name = r.pop("name")
+            us = r.pop("us_per_call", 0)
+            derived = json.dumps(r, default=str).replace('"', "'")
+            print(f"{name},{us},\"{derived}\"")
+
+
+if __name__ == "__main__":
+    main()

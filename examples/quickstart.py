@@ -1,0 +1,49 @@
+"""Quickstart: SPARQ-SGD in ~40 lines.
+
+Decentralized logistic regression on 12 nodes in a ring — event-triggered,
+sparsified+quantized gossip — compared against vanilla decentralized SGD.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (SignTopK, SparqConfig, decaying, make_topology,
+                        piecewise, run)
+from repro.core.baselines import init_vanilla, make_vanilla_step, run_generic
+from repro.data.synthetic import convex_dataset, logistic_loss_and_grad
+
+N_NODES, N_CLASSES, N_FEATURES = 12, 10, 64
+T = 1500
+
+# heterogeneous per-node data (each node over-samples 2 classes), ring graph
+X, Y = convex_dataset(N_NODES, 150, n_features=N_FEATURES,
+                      n_classes=N_CLASSES, seed=0)
+Xj, Yj = jnp.asarray(X), jnp.asarray(Y)
+_, make_grad_fn, full_loss = logistic_loss_and_grad(N_CLASSES)
+grad_fn = make_grad_fn(Xj, Yj, minibatch=8)
+topo = make_topology("ring", N_NODES)
+
+cfg = SparqConfig(
+    topology=topo,
+    compressor=SignTopK(k=10),                 # paper Section 5.1 operator
+    threshold=piecewise(50.0, 50.0, every=100, until=T),   # event trigger c_t
+    lr=decaying(1.0, 100.0),                   # eta_t = 1/(t+100)
+    H=5,                                       # 5 local steps between syncs
+    gamma=0.3,                                 # consensus stepsize
+)
+x0 = jnp.zeros(N_FEATURES * N_CLASSES)
+state, _ = run(cfg, grad_fn, x0, T, jax.random.PRNGKey(0))
+xbar = jnp.mean(state.x, axis=0)
+print(f"SPARQ-SGD   : loss {float(full_loss(xbar, Xj, Yj)):.4f} "
+      f"bits {float(state.bits):.3e} "
+      f"({int(state.triggers)}/{int(state.sync_rounds) * N_NODES} node-syncs "
+      f"triggered)")
+
+vstep = make_vanilla_step(topo, decaying(1.0, 100.0), grad_fn)
+vstate, _ = run_generic(vstep, init_vanilla(x0, N_NODES), T,
+                        jax.random.PRNGKey(0))
+vbar = jnp.mean(vstate.x, axis=0)
+print(f"vanilla SGD : loss {float(full_loss(vbar, Xj, Yj)):.4f} "
+      f"bits {float(vstate.bits):.3e}")
+print(f"bit savings : {float(vstate.bits) / float(state.bits):.0f}x")

@@ -1,0 +1,1 @@
+# SPARQ-SGD reproduction framework (JAX + Pallas).

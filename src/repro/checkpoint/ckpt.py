@@ -1,0 +1,87 @@
+"""Msgpack-based checkpointing for parameter / optimizer pytrees.
+
+Layout: <dir>/step_<N>/ with one msgpack file holding the flattened tree
+(paths -> {dtype, shape, raw bytes}) plus a manifest. Restores onto host then
+device_put's with the provided shardings (or default). Atomic via tmp+rename.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(directory: str, step: int, tree: Any, extra: Optional[dict] = None) -> str:
+    """Serialize `tree` to <directory>/step_<step>. Returns the final path."""
+    final = os.path.join(directory, f"step_{step}")
+    os.makedirs(directory, exist_ok=True)
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    flat = _flatten(tree)
+    payload = {}
+    for k, v in flat.items():
+        arr = np.asarray(jax.device_get(v))
+        payload[k] = {"dtype": str(arr.dtype), "shape": list(arr.shape),
+                      "data": arr.tobytes()}
+    with open(os.path.join(tmp, "arrays.msgpack"), "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    treedef = jax.tree_util.tree_structure(tree)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "keys": sorted(payload),
+                   "treedef": str(treedef), "extra": extra or {}}, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_", 1)[1]) for d in os.listdir(directory)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like: Any,
+            shardings: Optional[Any] = None) -> Any:
+    """Restore into the structure of `like` (shape/dtype-checked)."""
+    path = os.path.join(directory, f"step_{step}", "arrays.msgpack")
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    flat_like = _flatten(like)
+    missing = set(flat_like) - set(payload)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
+    leaves_by_key = {}
+    for k, ref in flat_like.items():
+        rec = payload[k]
+        arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(rec["shape"])
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"shape mismatch at {k}: {arr.shape} vs {ref.shape}")
+        leaves_by_key[k] = arr
+    # rebuild in tree order
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    ordered = []
+    for path, ref in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = jnp.asarray(leaves_by_key[key], dtype=ref.dtype)
+        ordered.append(arr)
+    tree = jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(like), ordered)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree

@@ -1,0 +1,4 @@
+"""Assigned architecture configs. Each module defines CONFIG: ModelConfig."""
+from repro.configs.registry import ARCH_IDS, get_config, for_shape
+
+__all__ = ["ARCH_IDS", "get_config", "for_shape"]

@@ -1,0 +1,16 @@
+"""chameleon-34b [arXiv:2405.09818] — early-fusion VLM, VQ image tokens, qk-norm.
+
+Early fusion is token-level (text + VQ image ids share the 65536 vocab); the
+ViT-free VQ tokenizer frontend is a STUB (DESIGN.md §5): input_specs() provides
+precomputed patch-token embeddings.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="chameleon-34b", family="vlm",
+    n_layers=48, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=22016, vocab_size=65536,
+    qk_norm=True, norm="rmsnorm", act="swiglu",
+    n_nodes=4, param_dtype="bfloat16",
+    citation="arXiv:2405.09818",
+)

@@ -1,0 +1,16 @@
+"""musicgen-large [arXiv:2306.05284] — decoder-only over EnCodec tokens.
+
+The EnCodec conv codec frontend is a STUB (DESIGN.md §5): input_specs() provides
+precomputed frame embeddings (B, S, d_model); the backbone below is the full
+language model over codec tokens (vocab 2048). GELU MLP + LayerNorm per MusicGen.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="musicgen-large", family="audio",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=32,
+    d_ff=8192, vocab_size=2048,
+    norm="layernorm", act="gelu",
+    n_nodes=8,
+    citation="arXiv:2306.05284",
+)

@@ -1,0 +1,20 @@
+"""SPARQ-SGD core: the paper's contribution as composable JAX modules."""
+from repro.core.compression import (Compressor, Identity, QSGD, QsTopK, RandK,
+                                    Sign, SignTopK, TopFrac, TopK,
+                                    make_compressor)
+from repro.core.schedule import (LRSchedule, decaying, fixed, is_sync,
+                                 theorem1_lr, theorem2_lr, warmup_piecewise)
+from repro.core.sparq import (SparqConfig, SparqState, init_state, make_step,
+                              run, run_scan)
+from repro.core.topology import Topology, make_topology
+from repro.core.triggers import (ThresholdSchedule, constant, make_schedule,
+                                 piecewise, poly, should_trigger, zero)
+
+__all__ = [
+    "Compressor", "Identity", "QSGD", "QsTopK", "RandK", "Sign", "SignTopK",
+    "TopFrac", "TopK", "make_compressor", "LRSchedule", "decaying", "fixed",
+    "is_sync", "theorem1_lr", "theorem2_lr", "warmup_piecewise", "SparqConfig",
+    "SparqState", "init_state", "make_step", "run", "run_scan", "Topology",
+    "make_topology", "ThresholdSchedule", "constant", "make_schedule",
+    "piecewise", "poly", "should_trigger", "zero",
+]

@@ -1,0 +1,115 @@
+"""Baselines the paper compares against (Section 5, Figure 1).
+
+* CHOCO-SGD [KSJ19/KLSJ19] — compressed gossip every iteration. Exactly SPARQ-SGD with
+  H = 1 and c_t = 0 (always trigger); we *reuse* the SPARQ engine to guarantee the
+  comparison is apples-to-apples (and test this equivalence).
+* Vanilla decentralized SGD [LZZ+17] — exact (uncompressed, 32-bit) gossip every step:
+      X^{t+1} = (X^t - eta_t dF) W
+* Centralized (all-reduce) minibatch SGD — the rate target O(1/nT): every step averages
+  gradients across all n nodes (n x minibatch), bits = 2 * 32d * (n-1)/n per node via
+  ring all-reduce accounting.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bits as bits_mod
+from repro.core.compression import Compressor
+from repro.core.schedule import LRSchedule
+from repro.core.sparq import GradFn, SparqConfig, SparqState, init_state, make_step
+from repro.core.topology import Topology
+from repro.core.triggers import zero
+
+
+def choco_config(topology: Topology, compressor: Compressor, lr: LRSchedule,
+                 gamma: Optional[float] = None, momentum: float = 0.0) -> SparqConfig:
+    """CHOCO-SGD == SPARQ-SGD(H=1, c_t=0)."""
+    return SparqConfig(topology=topology, compressor=compressor, threshold=zero(),
+                       lr=lr, H=1, gamma=gamma, momentum=momentum)
+
+
+class VanillaState(NamedTuple):
+    x: jax.Array
+    mom: jax.Array
+    t: jax.Array
+    bits: jax.Array
+
+
+def make_vanilla_step(topology: Topology, lr: LRSchedule, grad_fn: GradFn,
+                      momentum: float = 0.0):
+    """Decentralized vanilla SGD: exact neighbor averaging every step."""
+    W = jnp.asarray(topology.w, jnp.float32)
+    deg = jnp.asarray((topology.w > 0).sum(1) - 1, jnp.float32)
+
+    def step(state: VanillaState, key: jax.Array) -> VanillaState:
+        d = state.x.shape[-1]
+        g = grad_fn(state.x, state.t, key)
+        eta = lr(state.t)
+        if momentum > 0.0:
+            mom = momentum * state.mom + g
+            upd = mom
+        else:
+            mom, upd = state.mom, g
+        x_half = state.x - eta * upd
+        x_new = (x_half.T @ W.T).T          # X W  (W symmetric)
+        new_bits = state.bits + jnp.sum(deg) * bits_mod.dense_bits(d)
+        return VanillaState(x=x_new, mom=mom, t=state.t + 1, bits=new_bits)
+
+    return step
+
+
+def init_vanilla(x0: jax.Array, n: int) -> VanillaState:
+    x = jnp.broadcast_to(x0, (n, x0.shape[-1])) if x0.ndim == 1 else x0
+    return VanillaState(x=x, mom=jnp.zeros_like(x), t=jnp.int32(0),
+                        bits=jnp.float32(0.0))
+
+
+class CentralState(NamedTuple):
+    x: jax.Array          # (d,)
+    mom: jax.Array
+    t: jax.Array
+    bits: jax.Array
+
+
+def make_central_step(n: int, lr: LRSchedule, grad_fn: GradFn,
+                      momentum: float = 0.0):
+    """Centralized minibatch SGD over the same n data shards (rate target)."""
+
+    def step(state: CentralState, key: jax.Array) -> CentralState:
+        d = state.x.shape[-1]
+        xs = jnp.broadcast_to(state.x, (n, d))
+        g = jnp.mean(grad_fn(xs, state.t, key), axis=0)
+        eta = lr(state.t)
+        if momentum > 0.0:
+            mom = momentum * state.mom + g
+            upd = mom
+        else:
+            mom, upd = state.mom, g
+        # ring all-reduce: each node sends 2(n-1)/n * 32d bits
+        new_bits = state.bits + n * 2.0 * (n - 1) / n * bits_mod.dense_bits(d)
+        return CentralState(x=state.x - eta * upd, mom=mom, t=state.t + 1,
+                            bits=new_bits)
+
+    return step
+
+
+def init_central(x0: jax.Array) -> CentralState:
+    return CentralState(x=x0, mom=jnp.zeros_like(x0), t=jnp.int32(0),
+                        bits=jnp.float32(0.0))
+
+
+def run_generic(step, state, T: int, key: jax.Array, record_every: int = 0,
+                eval_fn=None, x_of=lambda s: s.x):
+    step = jax.jit(step)
+    trace = []
+    for t in range(T):
+        key, sub = jax.random.split(key)
+        state = step(state, sub)
+        if record_every and eval_fn is not None and (t + 1) % record_every == 0:
+            x = x_of(state)
+            xbar = jnp.mean(x, axis=0) if x.ndim == 2 else x
+            trace.append((t + 1, float(state.bits), float(eval_fn(xbar))))
+    return state, trace

@@ -1,0 +1,54 @@
+"""Bit accounting for compressed decentralized messages.
+
+These are the formulas EXPERIMENTS.md's bits-vs-accuracy curves use; they model what a
+real network message would carry (the paper counts bits the same way in Section 5).
+
+Conventions:
+* Uncompressed float = 32 bits (the reference engine keeps fp32 params, as the paper).
+* Top-k index = ceil(log2(d)) bits per selected coordinate.
+* Sign = 1 bit per coordinate + one 32-bit scale per tensor.
+* QSGD with s levels = 32-bit norm + per-coordinate (1 sign bit + ceil(log2(s+1)) level
+  bits). (Elias coding would do better; we report the plain bound, which is
+  conservative and matches the paper's "32 + d(1+log2 s)"-style accounting.)
+* A non-triggered node transmits 1 bit (the "no update" flag); a triggered node
+  transmits flag + payload. Metadata of one flag bit is included so that the
+  event-triggered savings are not overstated.
+"""
+from __future__ import annotations
+
+import math
+
+FLOAT_BITS = 32.0
+FLAG_BITS = 1.0
+
+
+def dense_bits(d: int) -> float:
+    return FLOAT_BITS * d
+
+
+def topk_index_bits(d: int, k: int) -> float:
+    return k * math.ceil(math.log2(max(d, 2)))
+
+
+def topk_bits(d: int, k: int) -> float:
+    """k fp32 values + k indices."""
+    return k * FLOAT_BITS + topk_index_bits(d, k)
+
+
+def sign_bits(d: int) -> float:
+    """1 bit/coordinate + one fp32 scale."""
+    return d + FLOAT_BITS
+
+
+def signtopk_bits(d: int, k: int) -> float:
+    """k sign bits + k indices + one fp32 scale."""
+    return k + topk_index_bits(d, k) + FLOAT_BITS
+
+
+def qsgd_bits(d: int, s: int) -> float:
+    return FLOAT_BITS + d * (1 + math.ceil(math.log2(s + 1)))
+
+
+def message_bits(payload_bits: float, triggered: bool) -> float:
+    """Bits actually sent by one node to ONE neighbor at a sync index."""
+    return FLAG_BITS + (payload_bits if triggered else 0.0)

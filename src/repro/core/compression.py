@@ -1,0 +1,287 @@
+"""Compression operators (Definition 1 of the paper).
+
+A compression operator C satisfies, for some omega in (0, 1]:
+
+    E_C ||x - C(x)||^2 <= (1 - omega) ||x||^2,   C(0) = 0.
+
+Implemented operators and their omega (paper Section 2):
+
+* ``TopK``     — keep the k largest-|.| entries.          omega = k/d
+* ``RandK``    — keep k uniformly random entries.          omega = k/d (in expectation)
+* ``Sign``     — (||x||_1 / d) * sign(x)  [KRSJ19].        omega = ||x||_1^2 / (d ||x||_2^2)
+* ``QSGD``     — stochastic quantizer Q_s [AGL+17].        omega = 1 - beta_{d,s},
+                 beta_{d,s} = min(d/s^2, sqrt(d)/s)  (valid compressor iff beta < 1)
+* ``SignTopK`` — ||TopK(x)||_1 / k * Sign(TopK(x)) [BDKD19], the paper's headline op.
+* ``QsTopK``   — (1/(1+beta_{k,s})) Q_s(TopK(x)) [BDKD19].
+
+Every operator also reports the number of bits a real network message would carry
+(``bits(shape)``); see core/bits.py for the formulas.
+
+All operators are pure-jnp, jit/vmap friendly, and operate on flat vectors; pytrees are
+handled by ``compress_tree`` in core/sparq.py (per-leaf, matching the paper's Section 5.2
+per-tensor treatment).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bits as bits_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """Base class. Subclasses implement __call__(x, key) -> y and omega(d)."""
+
+    name: str = "identity"
+
+    def __call__(self, x: jax.Array, key: Optional[jax.Array] = None) -> jax.Array:
+        return x
+
+    def omega(self, d: int) -> float:
+        return 1.0
+
+    def bits(self, d: int) -> float:
+        """Bits transmitted for one compressed d-dim message."""
+        return 32.0 * d
+
+    @property
+    def deterministic(self) -> bool:
+        return True
+
+
+@dataclasses.dataclass(frozen=True)
+class Identity(Compressor):
+    name: str = "identity"
+
+
+def _topk_mask(x: jax.Array, k: int) -> jax.Array:
+    """0/1 mask selecting the k largest-|x| entries (ties broken by index)."""
+    d = x.shape[-1]
+    k = min(k, d)
+    _, idx = jax.lax.top_k(jnp.abs(x), k)
+    return jnp.zeros_like(x).at[idx].set(1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK(Compressor):
+    k: int = 10
+    name: str = "topk"
+
+    def __call__(self, x, key=None):
+        return x * _topk_mask(x, self.k)
+
+    def omega(self, d):
+        return min(self.k, d) / d
+
+    def bits(self, d):
+        return bits_mod.topk_bits(d, min(self.k, d))
+
+
+@dataclasses.dataclass(frozen=True)
+class RandK(Compressor):
+    k: int = 10
+    name: str = "randk"
+
+    def __call__(self, x, key=None):
+        assert key is not None, "RandK requires a PRNG key"
+        d = x.shape[-1]
+        k = min(self.k, d)
+        idx = jax.random.choice(key, d, shape=(k,), replace=False)
+        mask = jnp.zeros_like(x).at[idx].set(1.0)
+        return x * mask
+
+    def omega(self, d):
+        return min(self.k, d) / d
+
+    def bits(self, d):
+        # indices can be a shared seed; count values only + 32b seed
+        return 32.0 * min(self.k, d) + 32.0
+
+    @property
+    def deterministic(self):
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class Sign(Compressor):
+    """Deterministic 1-bit quantizer (||x||_1/d) sign(x) [KRSJ19]."""
+
+    name: str = "sign"
+
+    def __call__(self, x, key=None):
+        d = x.shape[-1]
+        scale = jnp.sum(jnp.abs(x)) / d
+        # sign(0) = 0 would violate scale bookkeeping; use >=0 -> +1 convention
+        s = jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+        return scale * s
+
+    def omega(self, d):
+        # input-dependent: ||x||_1^2/(d ||x||_2^2) >= 1/d always
+        return 1.0 / d
+
+    def bits(self, d):
+        return bits_mod.sign_bits(d)
+
+
+def qsgd_beta(d: int, s: int) -> float:
+    return min(d / (s * s), math.sqrt(d) / s)
+
+
+@dataclasses.dataclass(frozen=True)
+class QSGD(Compressor):
+    """Stochastic quantizer Q_s [AGL+17]: unbiased, E||x-Q(x)||^2 <= beta ||x||^2.
+
+    Q_s(x)_i = ||x||_2 * sign(x_i) * xi_i(x, s) where xi rounds |x_i|/||x|| * s
+    randomly up or down to an integer level.
+    As written Q_s is unbiased but only a (1-beta)-compressor when scaled by
+    1/(1+beta); ``scaled=True`` applies that scaling (used inside compositions).
+    """
+
+    s: int = 16
+    scaled: bool = True
+    name: str = "qsgd"
+
+    def __call__(self, x, key=None):
+        assert key is not None, "QSGD requires a PRNG key"
+        d = x.shape[-1]
+        norm = jnp.linalg.norm(x)
+        safe = jnp.where(norm > 0, norm, 1.0)
+        level = jnp.abs(x) / safe * self.s  # in [0, s]
+        low = jnp.floor(level)
+        p_up = level - low
+        u = jax.random.uniform(key, x.shape, dtype=x.dtype)
+        q = (low + (u < p_up)) / self.s
+        y = norm * jnp.sign(x) * q
+        if self.scaled:
+            y = y / (1.0 + qsgd_beta(d, self.s))
+        return y.astype(x.dtype)
+
+    def omega(self, d):
+        b = qsgd_beta(d, self.s)
+        if self.scaled:
+            return 1.0 / (1.0 + b)
+        return max(1.0 - b, 0.0)
+
+    def bits(self, d):
+        return bits_mod.qsgd_bits(d, self.s)
+
+    @property
+    def deterministic(self):
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class SignTopK(Compressor):
+    """Composed operator (v) of Section 2: (||TopK(x)||_1 / k) * Sign(TopK(x)).
+
+    This is the operator used in the paper's experiments (SignTopK, k = top 10%
+    or k=10). omega = max(1/d, k/d * ||TopK||_1^2/(k ||TopK||_2^2)) >= 1/d.
+    """
+
+    k: int = 10
+    name: str = "signtopk"
+
+    def __call__(self, x, key=None):
+        d = x.shape[-1]
+        k = min(self.k, d)
+        mask = _topk_mask(x, k)
+        xk = x * mask
+        scale = jnp.sum(jnp.abs(xk)) / k
+        s = jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+        return scale * s * mask
+
+    def omega(self, d):
+        return 1.0 / d  # worst case; typically ~k/d * flatness factor
+
+    def bits(self, d):
+        return bits_mod.signtopk_bits(d, min(self.k, d))
+
+
+@dataclasses.dataclass(frozen=True)
+class QsTopK(Compressor):
+    """Composed operator (iv): 1/(1+beta_{k,s}) Q_s(TopK(x)).
+
+    The paper states the contraction factor 1 - omega = 1 - k/(d(1+beta_{k,s})),
+    i.e. omega = k / (d (1 + beta_{k,s})).
+    """
+
+    k: int = 10
+    s: int = 16
+    name: str = "qstopk"
+
+    def __call__(self, x, key=None):
+        assert key is not None
+        d = x.shape[-1]
+        k = min(self.k, d)
+        mask = _topk_mask(x, k)
+        xk = x * mask
+        norm = jnp.linalg.norm(xk)
+        safe = jnp.where(norm > 0, norm, 1.0)
+        level = jnp.abs(xk) / safe * self.s
+        low = jnp.floor(level)
+        p_up = level - low
+        u = jax.random.uniform(key, x.shape, dtype=x.dtype)
+        q = (low + (u < p_up)) / self.s
+        y = norm * jnp.sign(xk) * q * mask
+        return (y / (1.0 + qsgd_beta(k, self.s))).astype(x.dtype)
+
+    def omega(self, d):
+        k = min(self.k, d)
+        return k / (d * (1.0 + qsgd_beta(k, self.s)))
+
+    def bits(self, d):
+        k = min(self.k, d)
+        return bits_mod.topk_index_bits(d, k) + bits_mod.qsgd_bits(k, self.s)
+
+    @property
+    def deterministic(self):
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class TopFrac(SignTopK):
+    """SignTopK with k = ceil(frac * d) — Section 5.2 uses top 10% per tensor."""
+
+    frac: float = 0.1
+    name: str = "signtop_frac"
+
+    def _k(self, d: int) -> int:
+        return max(1, int(math.ceil(self.frac * d)))
+
+    def __call__(self, x, key=None):
+        d = x.shape[-1]
+        k = self._k(d)
+        mask = _topk_mask(x, k)
+        xk = x * mask
+        scale = jnp.sum(jnp.abs(xk)) / k
+        s = jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+        return scale * s * mask
+
+    def omega(self, d):
+        return 1.0 / d
+
+    def bits(self, d):
+        return bits_mod.signtopk_bits(d, self._k(d))
+
+
+_REGISTRY = {
+    "identity": Identity,
+    "topk": TopK,
+    "randk": RandK,
+    "sign": Sign,
+    "qsgd": QSGD,
+    "signtopk": SignTopK,
+    "qstopk": QsTopK,
+    "signtop_frac": TopFrac,
+}
+
+
+def make_compressor(name: str, **kw) -> Compressor:
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown compressor {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kw)

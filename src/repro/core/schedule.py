@@ -1,0 +1,68 @@
+"""Synchronization-index sets I_T and learning-rate schedules.
+
+* ``periodic_sync(H)``: I_T = {H, 2H, ...} — gap(I_T) = H, the common case.
+* LR schedules from the theorems:
+    - Theorem 1 (strongly convex): eta_t = 8 / (mu (a + t)), a >= max{5H/p, 32L/mu}.
+    - Theorem 2 (non-convex): fixed eta = sqrt(n/T).
+    - Section 5.1 practical: eta_t = b / (t + a).
+    - Section 5.2 practical: warmup then piecewise decay (factor 1/5 at milestones).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+
+
+def periodic_sync_mask(T: int, H: int) -> jnp.ndarray:
+    """Boolean mask m[t] = ((t+1) in I_T) for t in [0, T)."""
+    t = jnp.arange(1, T + 1)
+    return (t % H) == 0
+
+
+def is_sync(t, H: int):
+    """(t+1) in I_T for periodic I_T with gap H (works under jit)."""
+    return ((t + 1) % H) == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class LRSchedule:
+    fn: Callable[[jnp.ndarray], jnp.ndarray]
+    name: str
+
+    def __call__(self, t):
+        return self.fn(jnp.asarray(t, jnp.float32))
+
+
+def decaying(b: float, a: float) -> LRSchedule:
+    return LRSchedule(lambda t: b / (t + a), f"decay(b={b},a={a})")
+
+
+def theorem1_lr(mu: float, L: float, H: int, p: float) -> LRSchedule:
+    a = max(5.0 * H / p, 32.0 * L / mu)
+    return decaying(8.0 / mu, a)
+
+
+def fixed(eta: float) -> LRSchedule:
+    return LRSchedule(lambda t: jnp.full_like(t, eta), f"fixed({eta})")
+
+
+def theorem2_lr(n: int, T: int) -> LRSchedule:
+    return fixed(math.sqrt(n / T))
+
+
+def warmup_piecewise(base: float, warmup: int, milestones: Sequence[int],
+                     factor: float = 0.2) -> LRSchedule:
+    """Section 5.2: linear warmup then multiply by `factor` at each milestone."""
+    ms = tuple(milestones)
+
+    def fn(t):
+        warm = base * jnp.minimum((t + 1.0) / max(warmup, 1), 1.0)
+        mult = jnp.ones_like(t)
+        for m in ms:
+            mult = jnp.where(t >= m, mult * factor, mult)
+        return warm * mult
+
+    return LRSchedule(fn, f"warmup({warmup})+piecewise{ms}x{factor}")

@@ -1,0 +1,167 @@
+"""SPARQ-SGD reference engine — Algorithm 1, exactly, vectorized over the n nodes.
+
+This is the *algorithmic* ground truth used by the convex/non-convex experiments and by
+the distributed runtime's equivalence tests (dist/sparq_dist.py must match it bit-for-
+bit on the same inputs, modulo sharding). It keeps the whole node ensemble as dense
+(n, d) matrices on one device, exactly matching the matrix form of Appendix A.3:
+
+    X^{t+1/2} = X^t - eta_t dF(X^t, xi^t)
+    X_hat^{t+1} = X_hat^t + C((X^{t+1/2} - X_hat^t) P^t)        (P^t = trigger diag)
+    X^{t+1}   = X^{t+1/2} + gamma X_hat^{t+1} (W - I)
+
+Notes:
+* Every node maintains estimates x_hat_j of its neighbors; since updates q_j are
+  broadcast identically, one global X_hat matrix represents all copies consistently
+  (the paper uses the same representation in matrix form).
+* Initialization: the paper initializes x_hat = 0 and has every node send its
+  (compressed) x^0 in the first round; with the usual x^0 identical across nodes this is
+  handled by the same update rule at the first sync index.
+* Bit accounting follows core/bits.py: every node sends `flag + trig * payload` bits to
+  each of its deg_i neighbors at each sync index; non-sync steps send nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bits as bits_mod
+from repro.core.compression import Compressor, Identity
+from repro.core.schedule import LRSchedule, fixed
+from repro.core.topology import Topology
+from repro.core.triggers import ThresholdSchedule, zero
+
+GradFn = Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
+# grad_fn(x: (n, d), t: int32 scalar, key) -> (n, d) stochastic gradients
+
+
+@dataclasses.dataclass(frozen=True)
+class SparqConfig:
+    topology: Topology
+    compressor: Compressor = Identity()
+    threshold: ThresholdSchedule = zero()
+    lr: LRSchedule = fixed(0.1)
+    H: int = 1                      # gap(I_T): sync every H steps
+    gamma: Optional[float] = None   # None -> gamma* from Lemma 6
+    momentum: float = 0.0           # Section 5.2 uses 0.9 (theory uses 0)
+
+    def resolved_gamma(self) -> float:
+        if self.gamma is not None:
+            return float(self.gamma)
+        d = 1  # omega may be dimension-dependent; use the conservative omega at d -> inf
+        return self.topology.gamma_star(self._omega())
+
+    def _omega(self) -> float:
+        # a representative omega for gamma*: use the operator's omega at large d;
+        # for Sign-type ops this is the worst case 1/d ~ 0 -> guard with a floor.
+        om = self.compressor.omega(4096)
+        return max(om, 1e-3)
+
+
+class SparqState(NamedTuple):
+    x: jax.Array            # (n, d) local models
+    x_hat: jax.Array        # (n, d) public estimates
+    mom: jax.Array          # (n, d) momentum buffers (zeros when momentum == 0)
+    t: jax.Array            # () int32 step counter
+    bits: jax.Array         # () float64-ish total bits transmitted (all links)
+    sync_rounds: jax.Array  # () int32 number of sync indices so far
+    triggers: jax.Array     # () int32 number of (node, sync) trigger events
+
+
+def init_state(x0: jax.Array, n: int) -> SparqState:
+    """x0: (d,) shared init or (n, d) per-node init."""
+    x = jnp.broadcast_to(x0, (n, x0.shape[-1])) if x0.ndim == 1 else x0
+    z = jnp.zeros_like(x)
+    return SparqState(x=x, x_hat=z, mom=z, t=jnp.int32(0),
+                      bits=jnp.float32(0.0), sync_rounds=jnp.int32(0),
+                      triggers=jnp.int32(0))
+
+
+def make_step(cfg: SparqConfig, grad_fn: GradFn):
+    """Returns jit-able step(state, key) -> state implementing Algorithm 1."""
+    n = cfg.topology.n
+    W = jnp.asarray(cfg.topology.w, jnp.float32)
+    deg = jnp.asarray((cfg.topology.w > 0).sum(1) - 1, jnp.float32)  # neighbors
+    gamma = cfg.resolved_gamma()
+    comp = cfg.compressor
+    H = int(cfg.H)
+
+    def payload_bits(d: int) -> float:
+        return comp.bits(d)
+
+    def step(state: SparqState, key: jax.Array) -> SparqState:
+        d = state.x.shape[-1]
+        kg, kc = jax.random.split(key)
+        g = grad_fn(state.x, state.t, kg)
+        eta = cfg.lr(state.t)
+        if cfg.momentum > 0.0:
+            mom = cfg.momentum * state.mom + g
+            upd = mom
+        else:
+            mom = state.mom
+            upd = g
+        x_half = state.x - eta * upd
+
+        def sync_branch(_):
+            c_t = cfg.threshold(state.t)
+            diff = x_half - state.x_hat                       # (n, d)
+            sq = jnp.sum(diff * diff, axis=-1)                # (n,)
+            trig = sq > c_t * eta * eta                       # (n,) bool
+            keys = jax.random.split(kc, n)
+            q = jax.vmap(lambda v, k: comp(v, k))(diff, keys)
+            q = q * trig[:, None].astype(q.dtype)             # line 11: send 0
+            x_hat_new = state.x_hat + q                       # line 13
+            mix = x_hat_new.T @ (W - jnp.eye(n, dtype=W.dtype))
+            x_new = x_half + gamma * mix.T                    # line 15
+            msg = bits_mod.FLAG_BITS + trig.astype(jnp.float32) * payload_bits(d)
+            new_bits = state.bits + jnp.sum(msg * deg)
+            return (x_new, x_hat_new, new_bits,
+                    state.sync_rounds + 1,
+                    state.triggers + jnp.sum(trig).astype(jnp.int32))
+
+        def local_branch(_):
+            return (x_half, state.x_hat, state.bits, state.sync_rounds,
+                    state.triggers)
+
+        do_sync = ((state.t + 1) % H) == 0
+        x_new, x_hat_new, new_bits, rounds, trigs = jax.lax.cond(
+            do_sync, sync_branch, local_branch, operand=None)
+        return SparqState(x=x_new, x_hat=x_hat_new, mom=mom, t=state.t + 1,
+                          bits=new_bits, sync_rounds=rounds, triggers=trigs)
+
+    return step
+
+
+def run(cfg: SparqConfig, grad_fn: GradFn, x0: jax.Array, T: int,
+        key: jax.Array, record_every: int = 0,
+        eval_fn: Optional[Callable[[jax.Array], jax.Array]] = None):
+    """Run T steps. Returns (final_state, trace) where trace records
+    (t, bits, eval(x_bar)) every `record_every` steps when eval_fn is given."""
+    step = jax.jit(make_step(cfg, grad_fn))
+    state = init_state(x0, cfg.topology.n)
+    trace = []
+    for t in range(T):
+        key, sub = jax.random.split(key)
+        state = step(state, sub)
+        if record_every and eval_fn is not None and (t + 1) % record_every == 0:
+            xbar = jnp.mean(state.x, axis=0)
+            trace.append((t + 1, float(state.bits), float(eval_fn(xbar)),
+                          int(state.sync_rounds), int(state.triggers)))
+    return state, trace
+
+
+def run_scan(cfg: SparqConfig, grad_fn: GradFn, x0: jax.Array, T: int,
+             key: jax.Array):
+    """lax.scan variant (fast under jit; no trace)."""
+    step = make_step(cfg, grad_fn)
+    state = init_state(x0, cfg.topology.n)
+    keys = jax.random.split(key, T)
+
+    def body(s, k):
+        return step(s, k), None
+
+    final, _ = jax.lax.scan(body, state, keys)
+    return final

@@ -1,0 +1,177 @@
+"""Communication graphs and mixing matrices.
+
+The paper assumes a connected graph G=([n],E) with a symmetric doubly-stochastic mixing
+matrix W whose spectral gap is delta = 1 - |lambda_2(W)| > 0, and derives the consensus
+stepsize gamma* (Lemma 6):
+
+    gamma* = 2 delta omega / (64 delta + delta^2 + 16 beta^2 + 8 delta beta^2
+                              - 16 delta omega),
+    beta   = max_i (1 - lambda_i(W)) = ||W - I||_2,
+    p      = gamma* delta / 8  >= delta^2 omega / 644.
+
+Graphs provided: ring (paper Section 5), 2-D torus, complete, and Ramanujan-ish random
+regular expanders (paper Footnote 5 recommends expanders). Mixing weights: uniform
+neighbor weights (1/(deg+1), used by the paper's ring experiments) or
+Metropolis-Hastings (safe for irregular graphs).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def ring_adjacency(n: int) -> np.ndarray:
+    a = np.zeros((n, n))
+    if n == 1:
+        return a
+    for i in range(n):
+        a[i, (i + 1) % n] = 1
+        a[i, (i - 1) % n] = 1
+    if n == 2:
+        a = np.minimum(a, 1)
+    return a
+
+
+def torus2d_adjacency(rows: int, cols: int) -> np.ndarray:
+    n = rows * cols
+    a = np.zeros((n, n))
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            for dr, dc in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+                j = ((r + dr) % rows) * cols + (c + dc) % cols
+                if j != i:
+                    a[i, j] = 1
+    return a
+
+
+def complete_adjacency(n: int) -> np.ndarray:
+    return np.ones((n, n)) - np.eye(n)
+
+
+def random_regular_adjacency(n: int, deg: int, seed: int = 0) -> np.ndarray:
+    """Random regular graph via repeated permutation-matching (expander w.h.p.)."""
+    rng = np.random.default_rng(seed)
+    for _ in range(200):
+        a = np.zeros((n, n))
+        ok = True
+        for _ in range(deg // 2):
+            perm = rng.permutation(n)
+            for i, j in enumerate(perm):
+                if i == j or a[i, j]:
+                    ok = False
+                    break
+                a[i, j] = a[j, i] = 1
+            if not ok:
+                break
+        if ok and deg % 2 == 0 and _connected(a):
+            return a
+    raise RuntimeError("failed to sample a random regular graph")
+
+
+def _connected(a: np.ndarray) -> bool:
+    n = a.shape[0]
+    seen = {0}
+    stack = [0]
+    while stack:
+        i = stack.pop()
+        for j in np.nonzero(a[i])[0]:
+            if j not in seen:
+                seen.add(int(j))
+                stack.append(int(j))
+    return len(seen) == n
+
+
+def uniform_mixing(adj: np.ndarray) -> np.ndarray:
+    """W = I - L/(max_deg+1): uniform neighbor weight 1/(deg_max+1).
+
+    Symmetric doubly stochastic for any undirected graph.
+    """
+    deg = adj.sum(1)
+    dmax = deg.max() if adj.size else 0.0
+    w = adj / (dmax + 1.0)
+    np.fill_diagonal(w, 1.0 - w.sum(1))
+    return w
+
+
+def metropolis_mixing(adj: np.ndarray) -> np.ndarray:
+    n = adj.shape[0]
+    deg = adj.sum(1)
+    w = np.zeros((n, n))
+    for i in range(n):
+        for j in np.nonzero(adj[i])[0]:
+            w[i, j] = 1.0 / (max(deg[i], deg[j]) + 1.0)
+    np.fill_diagonal(w, 1.0 - w.sum(1))
+    return w
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """A mixing matrix plus the spectral quantities the theory needs."""
+
+    w: np.ndarray            # (n, n) symmetric doubly stochastic
+    name: str = "ring"
+
+    @property
+    def n(self) -> int:
+        return self.w.shape[0]
+
+    @property
+    def eigenvalues(self) -> np.ndarray:
+        return np.sort(np.linalg.eigvalsh(self.w))[::-1]
+
+    @property
+    def delta(self) -> float:
+        """Spectral gap 1 - |lambda_2|."""
+        ev = self.eigenvalues
+        if len(ev) == 1:
+            return 1.0
+        lam2 = max(abs(ev[1]), abs(ev[-1]))
+        return float(1.0 - lam2)
+
+    @property
+    def beta(self) -> float:
+        """||W - I||_2 = max_i (1 - lambda_i)."""
+        return float(1.0 - self.eigenvalues[-1])
+
+    def gamma_star(self, omega: float) -> float:
+        """Consensus stepsize of Lemma 6 / Theorems 1-2."""
+        d, b = self.delta, self.beta
+        denom = 64 * d + d * d + 16 * b * b + 8 * d * b * b - 16 * d * omega
+        return 2.0 * d * omega / denom
+
+    def p(self, omega: float) -> float:
+        return self.gamma_star(omega) * self.delta / 8.0
+
+    def neighbors(self, i: int) -> np.ndarray:
+        mask = self.w[i] > 0
+        mask[i] = False
+        return np.nonzero(mask)[0]
+
+    def validate(self, atol: float = 1e-10) -> None:
+        w = self.w
+        assert np.allclose(w, w.T, atol=atol), "W must be symmetric"
+        assert np.allclose(w.sum(0), 1.0, atol=atol), "W must be doubly stochastic"
+        assert np.all(w >= -atol), "W must be nonnegative"
+        assert self.delta > 0, "graph must be connected (delta > 0)"
+
+
+def make_topology(kind: str, n: int, *, deg: int = 4, seed: int = 0,
+                  mixing: str = "uniform") -> Topology:
+    if kind == "ring":
+        adj = ring_adjacency(n)
+    elif kind == "torus2d":
+        r = int(np.sqrt(n))
+        assert r * r == n, "torus2d needs a square node count"
+        adj = torus2d_adjacency(r, r)
+    elif kind == "complete":
+        adj = complete_adjacency(n)
+    elif kind == "expander":
+        adj = random_regular_adjacency(n, deg, seed)
+    else:
+        raise ValueError(f"unknown topology {kind!r}")
+    w = uniform_mixing(adj) if mixing == "uniform" else metropolis_mixing(adj)
+    t = Topology(w=w, name=kind)
+    t.validate()
+    return t

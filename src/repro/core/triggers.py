@@ -1,0 +1,71 @@
+"""Event-trigger threshold schedules c_t and the trigger rule (Algorithm 1, line 7).
+
+A node communicates at sync index t+1 iff
+
+    ||x_i^{t+1/2} - x_hat_i^{t}||^2  >  c_t * eta_t^2.
+
+Theory requires c_t ~ o(t); Theorem 1 uses c_t <= c0 * t^{1-eps}. Section 5 uses
+piecewise-constant schedules that *increase* over time (because eta_t^2 decays fast, a
+constant threshold would eventually always trigger — increasing c_t keeps the RHS
+meaningful). We provide:
+
+* ``constant``  : c_t = c0
+* ``poly``      : c_t = c0 * t^{1-eps}   (Theorem 1 schedule)
+* ``piecewise`` : Section 5.2 schedule — c0, then +step every `every` sync rounds until
+                  `until`, constant afterwards.
+* ``zero``      : c_t = 0 — always trigger (reduces SPARQ to Qsparse-local-SGD style
+                  compressed local SGD; with H=1 it is exactly CHOCO-SGD).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ThresholdSchedule:
+    fn: Callable[[jnp.ndarray], jnp.ndarray]
+    name: str
+
+    def __call__(self, t):
+        return self.fn(t)
+
+
+def zero() -> ThresholdSchedule:
+    return ThresholdSchedule(lambda t: jnp.zeros_like(jnp.asarray(t, jnp.float32)),
+                             "zero")
+
+
+def constant(c0: float) -> ThresholdSchedule:
+    return ThresholdSchedule(lambda t: jnp.full_like(jnp.asarray(t, jnp.float32), c0),
+                             f"const({c0})")
+
+
+def poly(c0: float, eps: float = 0.5) -> ThresholdSchedule:
+    assert 0.0 < eps < 1.0
+    def fn(t):
+        t = jnp.asarray(t, jnp.float32)
+        return c0 * jnp.maximum(t, 1.0) ** (1.0 - eps)
+    return ThresholdSchedule(fn, f"poly(c0={c0},eps={eps})")
+
+
+def piecewise(c0: float, step: float, every: int, until: int) -> ThresholdSchedule:
+    """Section 5.2: start at c0, add `step` every `every` steps until t=until."""
+    def fn(t):
+        t = jnp.asarray(t, jnp.float32)
+        inc = jnp.minimum(t, float(until)) // float(every)
+        return c0 + step * inc
+    return ThresholdSchedule(fn, f"piecewise(c0={c0},+{step}/{every}<= {until})")
+
+
+def should_trigger(x_half, x_hat, c_t, eta_t):
+    """Squared-norm trigger over a flat vector: returns bool scalar."""
+    diff = x_half - x_hat
+    return jnp.sum(diff * diff) > c_t * eta_t * eta_t
+
+
+def make_schedule(name: str, **kw) -> ThresholdSchedule:
+    return {"zero": zero, "constant": constant, "poly": poly,
+            "piecewise": piecewise}[name](**kw)

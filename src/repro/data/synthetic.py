@@ -1,0 +1,120 @@
+"""Synthetic data pipelines.
+
+1. ``TokenPipeline`` — deterministic, shardable LM token stream with a learnable
+   Markov structure (so loss genuinely decreases during training runs): tokens are
+   drawn from per-position bigram tables seeded per shard. Heterogeneous across
+   decentralized nodes (each node gets a different bigram table mixture), matching
+   the paper's heterogeneous-data setting.
+
+2. ``convex_dataset`` — the paper's Section 5.1 analog: d=7840 (784 features x 10
+   classes) multinomial logistic regression with HETEROGENEOUS class skew across the
+   n nodes (each node's sample pool over-represents 2 classes), on synthetic
+   Gaussian-mixture features.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPipeline:
+    vocab_size: int
+    seq_len: int
+    batch_per_node: int
+    n_nodes: int
+    seed: int = 0
+    n_modes: int = 8   # latent bigram modes; nodes mix them heterogeneously
+
+    def batch(self, node: int, step: int) -> Dict[str, np.ndarray]:
+        """Deterministic batch for (node, step) — reproducible across restarts."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, node, step]))
+        v = self.vocab_size
+        mode = node % self.n_modes
+        # mode-specific "grammar": next token = (a*tok + b) mod v with noise
+        a = 3 + 2 * mode
+        b = 17 * (mode + 1)
+        toks = np.empty((self.batch_per_node, self.seq_len + 1), np.int32)
+        toks[:, 0] = rng.integers(0, v, self.batch_per_node)
+        noise = rng.random((self.batch_per_node, self.seq_len)) < 0.1
+        rand = rng.integers(0, v, (self.batch_per_node, self.seq_len))
+        for t in range(self.seq_len):
+            nxt = (a * toks[:, t] + b) % v
+            toks[:, t + 1] = np.where(noise[:, t], rand[:, t], nxt)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def node_batches(self, node: int) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch(node, step)
+            step += 1
+
+    def global_batch(self, step: int) -> Dict[str, np.ndarray]:
+        """(n_nodes, batch_per_node, seq) stacked batch for the SPMD train step."""
+        per = [self.batch(i, step) for i in range(self.n_nodes)]
+        return {k: np.stack([b[k] for b in per]) for k in per[0]}
+
+
+def convex_dataset(n_nodes: int, samples_per_node: int = 200,
+                   n_features: int = 784, n_classes: int = 10, seed: int = 0,
+                   skew: float = 0.8) -> Tuple[np.ndarray, np.ndarray]:
+    """Heterogeneous multinomial-logit data: (X (n, m, f), Y (n, m) int).
+
+    Each node draws `skew` of its samples from 2 'home' classes (paper Section 5.1:
+    'heterogeneous distribution of data across classes')."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_classes, n_features)) * 2.0
+    X = np.empty((n_nodes, samples_per_node, n_features), np.float32)
+    Y = np.empty((n_nodes, samples_per_node), np.int32)
+    for i in range(n_nodes):
+        home = np.array([i % n_classes, (i + 1) % n_classes])
+        for m in range(samples_per_node):
+            if rng.random() < skew:
+                c = int(rng.choice(home))
+            else:
+                c = int(rng.integers(0, n_classes))
+            X[i, m] = centers[c] + rng.normal(size=n_features)
+            Y[i, m] = c
+    return X, Y
+
+
+def logistic_loss_and_grad(n_classes: int):
+    """Returns (loss_fn, grad_fn) for flattened (f*c,) parameter vectors.
+
+    loss(x_flat, X (m,f), Y (m,)) = mean CE; grad_fn vectorizes over nodes and
+    samples a minibatch per node per step — the GradFn signature core/sparq.py uses.
+    """
+
+    def loss(x_flat, Xb, Yb):
+        f = Xb.shape[-1]
+        Wm = x_flat.reshape(f, n_classes)
+        logits = Xb @ Wm
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(lp, Yb[:, None], 1))
+
+    gfun = jax.grad(loss)
+
+    def make_grad_fn(X: jax.Array, Y: jax.Array, minibatch: int):
+        n, m, f = X.shape
+
+        def grad_fn(x_nd, t, key):
+            keys = jax.random.split(key, n)
+
+            def node_grad(x, k, Xi, Yi):
+                idx = jax.random.randint(k, (minibatch,), 0, m)
+                return gfun(x, Xi[idx], Yi[idx])
+
+            return jax.vmap(node_grad)(x_nd, keys, X, Y)
+
+        return grad_fn
+
+    def full_loss(x_flat, X, Y):
+        n = X.shape[0]
+        return jnp.mean(jax.vmap(lambda Xi, Yi: loss(x_flat, Xi, Yi))(X, Y))
+
+    return loss, make_grad_fn, full_loss

@@ -1,0 +1,71 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+These provide flat-vector semantics over the blockwise kernels (padding to
+BLOCK=1024 tiles), the interface the distributed gossip path consumes.
+interpret defaults to True because this container has no TPU; on TPU pass
+interpret=False (kernels are written for pl.pallas_call + BlockSpec VMEM tiling).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qsgd import BLOCK, qsgd_blocks
+from repro.kernels.sign_topk import sign_topk_blocks
+
+
+def _to_blocks(x: jax.Array) -> Tuple[jax.Array, int, int]:
+    d = x.shape[0]
+    n = max(1, -(-d // BLOCK))
+    pad = n * BLOCK - d
+    return jnp.pad(x, (0, pad)).reshape(n, BLOCK), d, n
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def sign_topk(flat: jax.Array, k: int, interpret: bool = True
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Blockwise SignTopK of a flat vector, k total (ceil-split across blocks).
+
+    Returns (q dense (d,), values (n*k_b,), indices (n*k_b,) global int32) —
+    the (q, vals, idx) contract dist/sparq_dist.py's gossip uses."""
+    xb, d, n = _to_blocks(flat)
+    k_b = max(1, -(-k // n))
+    q, xe_new, scale = sign_topk_blocks(xb, jnp.zeros_like(xb),
+                                        jnp.float32(1.0), k_b,
+                                        interpret=interpret)
+    qf = q.reshape(-1)[:d]
+    # compact payload from the dense q (top_k over |q| recovers the support)
+    vals, idx = jax.lax.top_k(jnp.abs(qf), min(n * k_b, d))
+    vals = qf[idx]
+    return qf, vals, idx.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k_b", "interpret"))
+def trigger_compress_update(x_half: jax.Array, x_hat: jax.Array,
+                            threshold: jax.Array, k_b: int,
+                            interpret: bool = True
+                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Full fused SPARQ sync compute for one flat shard:
+
+    trig = [||x_half - x_hat||^2 > threshold];  q = trig * SignTopK_b(diff);
+    x_hat_new = x_hat + q.    Returns (q, x_hat_new, trig)."""
+    xh, d, n = _to_blocks(x_half)
+    xe, _, _ = _to_blocks(x_hat)
+    diff = (x_half - x_hat).astype(jnp.float32)
+    trig = (jnp.sum(diff * diff) > threshold).astype(jnp.float32)
+    q, xe_new, _ = sign_topk_blocks(xh, xe, trig, k_b, interpret=interpret)
+    return (q.reshape(-1)[:d], xe_new.reshape(-1)[:d], trig)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "interpret"))
+def qsgd(flat: jax.Array, key: jax.Array, s: int = 16,
+         interpret: bool = True) -> jax.Array:
+    """Blockwise QSGD quantization of a flat vector."""
+    xb, d, n = _to_blocks(flat)
+    u = jax.random.uniform(key, xb.shape, dtype=jnp.float32)
+    out = qsgd_blocks(xb, u, s=s, interpret=interpret)
+    return out.reshape(-1)[:d]

@@ -1,0 +1,48 @@
+"""Blockwise QSGD stochastic-quantizer Pallas kernel.
+
+Q_s over 1024-element VMEM tiles: per tile, ||x||_2 is a row reduction on the
+8x128 vreg layout; levels are computed and stochastically rounded with uniform
+noise that is PASSED IN as an input tile (keeps the kernel deterministic given
+the noise, which is what the oracle comparison and the decentralized bitstream
+replay need — and sidesteps pltpu PRNG availability in interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024
+BLOCK_ROWS = 8
+
+
+def _qsgd_kernel(x_ref, u_ref, out_ref, *, s: int):
+    x = x_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    norm = jnp.sqrt(jnp.sum(x * x, axis=1, keepdims=True))
+    safe = jnp.where(norm > 0, norm, 1.0)
+    level = jnp.abs(x) / safe * s
+    low = jnp.floor(level)
+    q = (low + (u < (level - low)).astype(jnp.float32)) / s
+    out_ref[...] = (norm * jnp.sign(x) * q).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "interpret"))
+def qsgd_blocks(x: jax.Array, u: jax.Array, s: int = 16,
+                interpret: bool = True) -> jax.Array:
+    """x, u: (n_blocks, BLOCK). Returns quantized x (same shape/dtype)."""
+    n, b = x.shape
+    assert b == BLOCK
+    rows = min(BLOCK_ROWS, n)
+    assert n % rows == 0
+    return pl.pallas_call(
+        functools.partial(_qsgd_kernel, s=s),
+        grid=(n // rows,),
+        in_specs=[pl.BlockSpec((rows, BLOCK), lambda i: (i, 0)),
+                  pl.BlockSpec((rows, BLOCK), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows, BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, BLOCK), x.dtype),
+        interpret=interpret,
+    )(x, u)

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+Semantics are the BLOCKWISE operators of DESIGN.md §3: inputs are processed in
+tiles of `block` elements; Top-k selection, scales and thresholds are per tile.
+Tie-breaking at the threshold keeps the earliest (lowest-index) elements, exactly
+like the kernels (both use jax.lax.top_k ordering).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 1024  # elements per tile (8 sublanes x 128 lanes)
+
+
+def pad_to_blocks(x: jax.Array, block: int = BLOCK) -> Tuple[jax.Array, int]:
+    d = x.shape[0]
+    n = -(-d // block)
+    pad = n * block - d
+    return jnp.pad(x, (0, pad)), n
+
+
+def sqdiff_partials_ref(x: jax.Array, y: jax.Array, block: int = BLOCK
+                        ) -> jax.Array:
+    """Per-block partial sums of (x-y)^2. x, y: (n*block,). -> (n,) f32."""
+    n = x.shape[0] // block
+    d = (x.astype(jnp.float32) - y.astype(jnp.float32)).reshape(n, block)
+    return jnp.sum(d * d, axis=1)
+
+
+def sign_topk_ref(x_half: jax.Array, x_hat: jax.Array, trig: jax.Array,
+                  k_b: int, block: int = BLOCK
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused blockwise SignTopK of diff = x_half - x_hat, gated by trig.
+
+    Per block b: threshold = k_b-th largest |diff|; support = {|diff| >= thr}
+    (ties at the threshold keep EVERY tied element — |support| >= k_b);
+    scale_b = selected mass / |support|; q = trig * scale_b * sign(diff) on the
+    support; x_hat_new = x_hat + q. This is exactly the kernel's semantics
+    (threshold compare is branch-free on the VPU; under bf16 ties are common).
+    Returns (q, x_hat_new, vals (n,k_b), idx (n,k_b) block-local int32) — the
+    compact payload keeps the first k_b support entries (top_k order).
+    """
+    n = x_half.shape[0] // block
+    diff = (x_half.astype(jnp.float32)
+            - x_hat.astype(jnp.float32)).reshape(n, block)
+    av = jnp.abs(diff)
+    top_vals, top_idx = jax.lax.top_k(av, k_b)                 # (n, k_b)
+    thr = top_vals[:, -1:]                                     # (n, 1)
+    mask = (av >= thr).astype(jnp.float32)
+    nsel = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
+    scale = jnp.sum(av * mask, axis=1, keepdims=True) / nsel   # (n, 1)
+    signs = jnp.where(diff >= 0, 1.0, -1.0)
+    t = trig.astype(jnp.float32)
+    q = (t * scale * signs * mask).astype(x_half.dtype)
+    x_hat_new = x_hat + q.reshape(-1)
+    sel_signs = jnp.take_along_axis(signs, top_idx, axis=1)
+    vals = (t * scale * sel_signs).astype(x_half.dtype)
+    return q.reshape(-1), x_hat_new, vals, top_idx.astype(jnp.int32)
+
+
+def qsgd_ref(x: jax.Array, u: jax.Array, s: int, block: int = BLOCK
+             ) -> jax.Array:
+    """Blockwise QSGD with s levels; u: uniform [0,1) noise, same shape as x.
+
+    Per block: norm2 = ||x_b||; level = |x|/norm * s rounded stochastically;
+    out = norm * sign(x) * level / s (unbiased; no 1/(1+beta) scaling here)."""
+    n = x.shape[0] // block
+    xb = x.reshape(n, block).astype(jnp.float32)
+    ub = u.reshape(n, block).astype(jnp.float32)
+    norm = jnp.sqrt(jnp.sum(xb * xb, axis=1, keepdims=True))
+    safe = jnp.where(norm > 0, norm, 1.0)
+    level = jnp.abs(xb) / safe * s
+    low = jnp.floor(level)
+    q = (low + (ub < (level - low)).astype(jnp.float32)) / s
+    out = norm * jnp.sign(xb) * q
+    return out.reshape(-1).astype(x.dtype)

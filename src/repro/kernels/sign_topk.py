@@ -1,0 +1,88 @@
+"""Fused trigger-gated blockwise SignTopK Pallas kernel (the paper's compression
+hot-spot, TPU-native).
+
+One pass over HBM per sync: reads (x_half, x_hat) tiles into VMEM, computes
+diff, the per-tile Top-k support (sort-based threshold selection — pure VPU, no
+MXU), the SignTopK message q = trig * scale * sign(diff) on the support, and the
+updated estimate x_hat + q — all in one kernel, instead of the 4 separate HBM
+sweeps an unfused implementation costs (diff, top_k, scatter, add).
+
+Layout: the flat parameter shard is padded and reshaped to (n_blocks, BLOCK)
+with BLOCK = 1024 = 8 sublanes x 128 lanes; BlockSpec tiles one (block_rows,
+BLOCK) slab per grid step so the VMEM working set is block_rows x 4KiB x 3
+buffers, well under the ~16 MiB v5e VMEM budget.
+
+GPU-vs-TPU note (DESIGN §3): the reference CUDA Top-k is a global radix select;
+here selection is per 1024-element tile (same total k) — no cross-tile traffic,
+sort runs on 8x128 vregs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024
+BLOCK_ROWS = 8  # tiles per grid step: VMEM slab = 8 x 1024 x 4B x 3 = 96 KiB
+
+
+def _sign_topk_kernel(xh_ref, xe_ref, trig_ref, q_ref, xe_new_ref, scale_ref,
+                      *, k_b: int):
+    xh = xh_ref[...]
+    xe = xe_ref[...]
+    trig = trig_ref[0]
+    # subtract in fp32 by spec (interpret mode stores bf16 refs as f32;
+    # casting first makes kernel and oracle bit-identical on both paths)
+    diff = xh.astype(jnp.float32) - xe.astype(jnp.float32)
+    av = jnp.abs(diff)
+    # per-row (tile) threshold: k_b-th largest |diff| via descending sort
+    srt = jax.lax.sort(av, dimension=1, is_stable=False)       # ascending
+    thr = srt[:, BLOCK - k_b][:, None]                          # (rows, 1)
+    topsum = jnp.sum(jnp.where(av >= thr, av, 0.0), axis=1, keepdims=True)
+    nsel = jnp.sum((av >= thr).astype(jnp.float32), axis=1, keepdims=True)
+    # ties at the threshold can select > k_b entries; scale uses the true
+    # selected mass so the operator stays a contraction (cf. ref.py oracle)
+    scale = topsum / jnp.maximum(nsel, 1.0)
+    signs = jnp.where(diff >= 0, 1.0, -1.0)
+    q = jnp.where(av >= thr, trig * scale * signs, 0.0).astype(xh.dtype)
+    q_ref[...] = q
+    xe_new_ref[...] = xe + q
+    scale_ref[...] = (trig * scale[:, 0]).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("k_b", "interpret"))
+def sign_topk_blocks(x_half: jax.Array, x_hat: jax.Array, trig: jax.Array,
+                     k_b: int, interpret: bool = True
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x_half, x_hat: (n_blocks, BLOCK); trig: () f32 in {0., 1.}.
+
+    Returns (q, x_hat_new, per-block scale). interpret=True on CPU."""
+    n, b = x_half.shape
+    assert b == BLOCK, f"inner dim must be {BLOCK}"
+    rows = min(BLOCK_ROWS, n)
+    assert n % rows == 0
+    grid = (n // rows,)
+    trig_arr = jnp.asarray(trig, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        functools.partial(_sign_topk_kernel, k_b=k_b),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((rows, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rows, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((rows, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((rows,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, BLOCK), x_half.dtype),
+            jax.ShapeDtypeStruct((n, BLOCK), x_half.dtype),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x_half, x_hat, trig_arr)

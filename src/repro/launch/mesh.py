@@ -1,0 +1,21 @@
+"""Production mesh builders.
+
+Target: TPU v5e, 256 chips per pod. Single pod = (16, 16) over (data, model);
+multi-pod = (2, 16, 16) over (pod, data, model). A FUNCTION (not a module-level
+constant) so importing never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+# Hardware constants for the roofline (TPU v5e)
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link

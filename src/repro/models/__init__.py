@@ -1,0 +1,7 @@
+"""Model zoo: dense GQA / SSD / MoE / MLA / hybrid / modality-stub backbones."""
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
+from repro.models.transformer import (decode_step, forward, init_cache,
+                                      init_params, lm_loss)
+
+__all__ = ["INPUT_SHAPES", "InputShape", "ModelConfig", "decode_step",
+           "forward", "init_cache", "init_params", "lm_loss"]

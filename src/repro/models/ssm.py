@@ -1,0 +1,200 @@
+"""Mamba2 — SSD (state-space duality) block [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm (quadratic within a chunk,
+linear recurrence across chunks — the "dual" form); decode uses the O(1)
+recurrent update. Grouped B/C (ssm_groups), multi-head x with head_dim P,
+depthwise causal conv over (x, B, C) channels, learned A (per head, negative),
+D skip, gated RMSNorm before out-projection — matching the reference block.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from einops import rearrange, repeat
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rms_norm_vec
+
+Params = Dict[str, jax.Array]
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.d_inner
+    heads = cfg.ssm_heads
+    return d_in, heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+
+
+def conv_channels(cfg: ModelConfig) -> int:
+    d_in, _, _, g, n = _dims(cfg)
+    return d_in + 2 * g * n
+
+
+def init_ssm(cfg: ModelConfig, key) -> Params:
+    d = cfg.d_model
+    d_in, h, p_dim, g, n = _dims(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    d_proj = 2 * d_in + 2 * g * n + h   # z, x, B, C, dt
+    return {
+        "w_in": dense_init(ks[0], (d, d_proj), dt),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, conv_channels(cfg)), dt, scale=0.5),
+        "conv_b": jnp.zeros((conv_channels(cfg),), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(dt),
+        "d_skip": jnp.ones((h,), dt),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 0.01))).astype(dt),
+        "norm_scale": jnp.ones((d_in,), dt),
+        "w_out": dense_init(ks[2], (d_in, d), dt,
+                            scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    d_in, h, p_dim, g, n = _dims(cfg)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * g * n], axis=-1)
+    return z, xbc, dt_raw
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array):
+    """Depthwise causal conv. xbc: (B, L, C); w: (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def segsum(x: jax.Array) -> jax.Array:
+    """Lower-triangular cumulative segment sums: out[..., i, j] = sum_{j<k<=i} x[k]."""
+    l = x.shape[-1]
+    x = repeat(x, "... l -> ... l e", e=l)
+    mask = jnp.tril(jnp.ones((l, l), bool), -1)
+    x = jnp.where(mask, x, 0)
+    x_seg = jnp.cumsum(x, axis=-2)
+    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    return jnp.where(mask, x_seg, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+                chunk: int, initial_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """SSD scan. x: (B, L, H, P); a: (B, L, H) (= dt * A, negative);
+    b, c: (B, L, G, N). Heads per group = H // G. Returns y (B,L,H,P) and the
+    final state (B, H, P, N). All math fp32."""
+    bb, L, h, p = x.shape
+    g = b.shape[2]
+    x, a, b, c = (t.astype(jnp.float32) for t in (x, a, b, c))
+    b = repeat(b, "b l g n -> b l (g r) n", r=h // g)
+    c = repeat(c, "b l g n -> b l (g r) n", r=h // g)
+    nc = L // chunk
+    assert nc * chunk == L, f"L={L} not divisible by chunk={chunk}"
+    x, a, b, c = (rearrange(t, "b (c l) ... -> b c l ...", l=chunk)
+                  for t in (x, a, b, c))
+    a = rearrange(a, "b c l h -> b h c l")
+    a_cs = jnp.cumsum(a, axis=-1)
+
+    # 1. intra-chunk (quadratic / "attention-like") term.
+    # Factored into pairwise einsums with explicit order so no (b,c,l,h,n,p)
+    # 6-D intermediate is ever materialized (EXPERIMENTS.md §Perf iter-1:
+    # the naive 4-operand einsum blew temp memory up ~20x at 32k prefill).
+    L_mat = jnp.exp(segsum(a))                              # (b,h,c,l,l)
+    cb = jnp.einsum("bclhn,bcshn->bhcls", c, b)             # (b,h,c,l,l)
+    y_diag = jnp.einsum("bhcls,bcshp->bclhp", cb * L_mat, x)
+
+    # 2. chunk-final states
+    decay_states = jnp.exp(a_cs[..., -1:] - a_cs)           # (b,h,c,l)
+    xd = x * rearrange(decay_states, "b h c l -> b c l h")[..., None]
+    states = jnp.einsum("bclhn,bclhp->bchpn", b, xd)
+
+    # 3. inter-chunk recurrence on states
+    if initial_state is None:
+        initial_state = jnp.zeros((bb, h, p, b.shape[-1]), jnp.float32)
+    states = jnp.concatenate([initial_state[:, None], states], axis=1)
+    a_chunk = jnp.pad(a_cs[..., -1], ((0, 0), (0, 0), (1, 0)))
+    decay_chunk = jnp.exp(segsum(a_chunk))                  # (b,h,c+1,c+1)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, states)
+    states, final_state = new_states[:, :-1], new_states[:, -1]
+
+    # 4. state -> output term (same pairwise factoring)
+    state_decay = jnp.exp(a_cs)                             # (b,h,c,l)
+    y_off = jnp.einsum("bclhn,bchpn->bclhp", c, states)
+    y_off = y_off * rearrange(state_decay, "b h c l -> b c l h")[..., None]
+
+    y = rearrange(y_diag + y_off, "b c l h p -> b (c l) h p")
+    return y, final_state
+
+
+def ssm_forward(cfg: ModelConfig, p: Params, x: jax.Array,
+                positions: jax.Array) -> jax.Array:
+    """Train/prefill. x: (B, L, D) -> (B, L, D)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    bsz, L, _ = x.shape
+    d_in, h, p_dim, g, n = _dims(cfg)
+    zxbcdt = x @ p["w_in"].astype(cd)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(xbc, p["conv_w"].astype(cd), p["conv_b"].astype(cd))
+    xs, b, c = jnp.split(xbc, [d_in, d_in + g * n], axis=-1)
+    xs = rearrange(xs, "b l (h p) -> b l h p", p=p_dim)
+    b = rearrange(b, "b l (g n) -> b l g n", n=n)
+    c = rearrange(c, "b l (g n) -> b l g n", n=n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))        # (B,L,H)
+    a_neg = -jnp.exp(p["a_log"].astype(jnp.float32))                # (H,)
+    chunk = min(cfg.ssm_chunk, L)
+    while L % chunk:
+        chunk -= 1
+    y, _ = ssd_chunked(xs * dt[..., None], dt * a_neg[None, None, :],
+                       b, c, chunk)
+    y = y + xs.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = rearrange(y, "b l h p -> b l (h p)").astype(cd)
+    y = rms_norm_vec(y * jax.nn.silu(z)) * p["norm_scale"].astype(cd)
+    return y @ p["w_out"].astype(cd)
+
+
+# ------------------------------------------------------------------ decode
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, n_layers: Optional[int] = None
+                   ) -> Params:
+    d_in, h, p_dim, g, n = _dims(cfg)
+    L = cfg.n_layers if n_layers is None else n_layers
+    cd = jnp.dtype(cfg.compute_dtype)
+    return {
+        "state": jnp.zeros((L, batch, h, p_dim, n), jnp.float32),
+        "conv": jnp.zeros((L, batch, cfg.ssm_conv - 1, conv_channels(cfg)), cd),
+    }
+
+
+def ssm_decode(cfg: ModelConfig, p: Params, x: jax.Array,
+               state: jax.Array, conv_buf: jax.Array
+               ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """One-token recurrent update. x: (B, 1, D); state: (B, H, P, N);
+    conv_buf: (B, K-1, C)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    bsz = x.shape[0]
+    d_in, h, p_dim, g, n = _dims(cfg)
+    zxbcdt = x[:, 0] @ p["w_in"].astype(cd)                  # (B, proj)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    window = jnp.concatenate([conv_buf, xbc[:, None, :]], axis=1)  # (B,K,C)
+    w = p["conv_w"].astype(cd)
+    conv_out = jnp.einsum("bkc,kc->bc", window, w) + p["conv_b"].astype(cd)
+    xbc = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:]
+    xs, b, c = jnp.split(xbc, [d_in, d_in + g * n], axis=-1)
+    xs = rearrange(xs, "b (h p) -> b h p", p=p_dim).astype(jnp.float32)
+    b = repeat(rearrange(b, "b (g n) -> b g n", n=n), "b g n -> b (g r) n",
+               r=h // g).astype(jnp.float32)
+    c = repeat(rearrange(c, "b (g n) -> b g n", n=n), "b g n -> b (g r) n",
+               r=h // g).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))        # (B,H)
+    a_neg = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a_neg[None, :])                            # (B,H)
+    new_state = (state * decay[..., None, None]
+                 + jnp.einsum("bh,bhp,bhn->bhpn", dt, xs, b))
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, c)
+    y = y + xs * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = rearrange(y, "b h p -> b (h p)").astype(cd)
+    y = rms_norm_vec(y * jax.nn.silu(z)) * p["norm_scale"].astype(cd)
+    out = (y @ p["w_out"].astype(cd))[:, None, :]
+    return out, (new_state, new_conv)

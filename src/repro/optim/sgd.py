@@ -1,0 +1,96 @@
+"""Optimizers as pure (init, update) pairs over parameter pytrees.
+
+SPARQ-SGD's theory uses plain SGD (Theorems 1-2); Section 5.2 uses SGD+momentum 0.9;
+AdamW is provided for the framework's standalone (non-decentralized) training path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+OptState = Any
+UpdateFn = Callable[[Params, OptState, Params, jax.Array], Tuple[Params, OptState]]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Params], OptState]
+    update: UpdateFn        # (grads, state, params, lr) -> (new_params, new_state)
+    name: str
+
+
+def sgd(weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        def upd(p, g):
+            g = g + weight_decay * p if weight_decay else g
+            return (p - lr * g).astype(p.dtype)
+        return jax.tree.map(upd, params, grads), state
+
+    return Optimizer(init, update, "sgd")
+
+
+def momentum(beta: float = 0.9, weight_decay: float = 0.0,
+             nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+    def update(grads, state, params, lr):
+        def upd(p, g, m):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            m2 = beta * m + g
+            step = g + beta * m2 if nesterov else m2
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m2
+        out = jax.tree.map(upd, params, grads, state)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, new_m
+
+    return Optimizer(init, update, f"momentum({beta})")
+
+
+class AdamState(NamedTuple):
+    mu: Params
+    nu: Params
+    count: jax.Array
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamState(jax.tree.map(z, params), jax.tree.map(z, params),
+                         jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr):
+        c = state.count + 1
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(p, g, mu, nu):
+            g = g.astype(jnp.float32)
+            mu2 = b1 * mu + (1 - b1) * g
+            nu2 = b2 * nu + (1 - b2) * g * g
+            step = (mu2 / bc1) / (jnp.sqrt(nu2 / bc2) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), mu2, nu2
+
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+        is3 = lambda t: isinstance(t, tuple) and len(t) == 3
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=is3)
+        new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=is3)
+        new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=is3)
+        return new_p, AdamState(new_mu, new_nu, c)
+
+    return Optimizer(init, update, "adamw")
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    return {"sgd": sgd, "momentum": momentum, "adamw": adamw}[name](**kw)

@@ -1,0 +1,113 @@
+"""Property tests for the compression operators (Definition 1):
+
+    E_C ||x - C(x)||^2 <= (1 - omega) ||x||^2     and     C(0) = 0.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import (QSGD, QsTopK, RandK, Sign, SignTopK,
+                                    TopFrac, TopK, make_compressor, qsgd_beta)
+
+DIMS = st.integers(min_value=4, max_value=512)
+
+
+def _vec(seed, d, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), (d,))
+
+
+def _err_ratio(c, x, key=None):
+    y = c(x, key)
+    num = float(jnp.sum((x - y) ** 2))
+    den = float(jnp.sum(x ** 2))
+    return num / max(den, 1e-30)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), d=DIMS, k=st.integers(1, 64))
+def test_topk_contraction(seed, d, k):
+    c = TopK(k=k)
+    x = _vec(seed, d)
+    assert _err_ratio(c, x) <= 1.0 - c.omega(d) + 1e-5
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), d=DIMS)
+def test_sign_contraction(seed, d):
+    c = Sign()
+    x = _vec(seed, d)
+    # exact omega for sign is ||x||_1^2 / (d ||x||_2^2) >= 1/d
+    l1 = float(jnp.sum(jnp.abs(x)))
+    l2sq = float(jnp.sum(x ** 2))
+    omega_exact = l1 * l1 / (d * l2sq)
+    assert _err_ratio(c, x) <= 1.0 - omega_exact + 1e-5
+    assert omega_exact >= c.omega(d) - 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), d=DIMS, k=st.integers(1, 64))
+def test_signtopk_contraction(seed, d, k):
+    c = SignTopK(k=k)
+    x = _vec(seed, d)
+    assert _err_ratio(c, x) <= 1.0 - c.omega(d) + 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), d=DIMS, k=st.integers(1, 32),
+       s=st.sampled_from([4, 16, 64]))
+def test_qstopk_contraction_in_expectation(seed, d, k, s):
+    c = QsTopK(k=k, s=s)
+    x = _vec(seed, d)
+    keys = jax.random.split(jax.random.PRNGKey(seed ^ 0x5EED), 64)
+    ratios = [_err_ratio(c, x, kk) for kk in keys]
+    assert np.mean(ratios) <= 1.0 - c.omega(d) + 0.05
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), d=DIMS, k=st.integers(1, 32))
+def test_randk_contraction_in_expectation(seed, d, k):
+    c = RandK(k=k)
+    x = _vec(seed, d)
+    keys = jax.random.split(jax.random.PRNGKey(seed ^ 0xABCD), 128)
+    ratios = [_err_ratio(c, x, kk) for kk in keys]
+    assert np.mean(ratios) <= 1.0 - c.omega(d) + 0.08
+
+
+def test_qsgd_unbiased_and_contraction():
+    d, s = 256, 16
+    c = QSGD(s=s, scaled=False)
+    x = _vec(0, d)
+    keys = jax.random.split(jax.random.PRNGKey(1), 512)
+    ys = jnp.stack([c(x, k) for k in keys])
+    bias = float(jnp.max(jnp.abs(jnp.mean(ys, 0) - x)))
+    assert bias < 0.05 * float(jnp.max(jnp.abs(x)))  # unbiased
+    beta = qsgd_beta(d, s)
+    ratios = [float(jnp.sum((x - y) ** 2) / jnp.sum(x ** 2)) for y in ys]
+    assert np.mean(ratios) <= beta + 0.05
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("topk", {"k": 8}), ("sign", {}), ("signtopk", {"k": 8}),
+    ("signtop_frac", {"frac": 0.1}), ("identity", {}),
+])
+def test_zero_maps_to_zero(name, kw):
+    c = make_compressor(name, **kw)
+    z = jnp.zeros(64)
+    assert float(jnp.sum(jnp.abs(c(z)))) == 0.0
+
+
+def test_topfrac_matches_paper_setting():
+    """Section 5.2: top 10% of each tensor."""
+    c = TopFrac(frac=0.1)
+    x = _vec(3, 1000)
+    y = c(x)
+    assert int(jnp.sum(y != 0)) == 100
+
+
+def test_composed_beats_components_on_bits():
+    """SignTopK sends fewer bits than TopK and than Sign for the same d."""
+    d, k = 7840, 10  # the paper's MNIST setting
+    assert SignTopK(k=k).bits(d) < TopK(k=k).bits(d)
+    assert SignTopK(k=k).bits(d) < Sign().bits(d)

@@ -1,0 +1,123 @@
+"""Distributed SPARQ on 8 simulated devices (subprocess: XLA_FLAGS must be set
+before jax initializes, and the rest of the suite must keep seeing 1 device)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs.registry import get_config
+    from repro.dist import sharding as sh
+    from repro.dist.sparq_dist import DistSparqConfig, build_sparq
+    from repro.core.topology import make_topology
+
+    cfg = dataclasses.replace(get_config("qwen1.5-0.5b").reduced(), n_nodes=4)
+    prod = jax.make_mesh((4, 2), ("data", "model"))
+    mesh = sh.train_mesh(prod, cfg)
+
+    def setup(variant, frac=1.0, H=2, steps=6, kernel=False):
+        dcfg = DistSparqConfig(H=H, variant=variant, frac=frac,
+                               use_kernel=kernel)
+        init_fn, train_step, state_specs, _ = build_sparq(cfg, mesh, dcfg)
+        state = init_fn(jax.random.PRNGKey(0))
+        ssh = jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs,
+                           is_leaf=lambda x: isinstance(x, P))
+        state = jax.device_put(state, ssh)
+        rng = np.random.default_rng(0)
+        batch = {k: rng.integers(0, cfg.vocab_size, (4, 2, 32)).astype(np.int32)
+                 for k in ("tokens", "labels")}
+        bspecs = sh.train_batch_specs(
+            jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                         batch), mesh)
+        bsh = jax.tree.map(lambda s: NamedSharding(mesh, s), bspecs,
+                           is_leaf=lambda x: isinstance(x, P))
+        batch = jax.device_put(batch, bsh)
+        step = jax.jit(train_step, in_shardings=(ssh, bsh))
+        losses = []
+        for _ in range(steps):
+            state, m = step(state, batch)
+            losses.append(float(m["loss"]))
+        return state, losses, m
+
+    out = {}
+    s_dense, l_dense, m_dense = setup("dense")
+    s_ring, l_ring, _ = setup("ring")
+    p1 = jax.tree.leaves(s_dense["params"])
+    p2 = jax.tree.leaves(s_ring["params"])
+    out["dense_ring_max_diff"] = max(
+        float(jnp.max(jnp.abs(a - b))) for a, b in zip(p1, p2))
+    out["loss_first"] = l_dense[0]
+    out["loss_last"] = l_dense[-1]
+    out["bits"] = float(m_dense["bits"])
+    out["triggers"] = float(m_dense["triggers"])
+
+    # one-step gossip algebra check against host-side reference (H=1, frac=1)
+    dcfg = DistSparqConfig(H=1, variant="dense", frac=1.0,
+                           threshold=__import__("repro.core.triggers",
+                           fromlist=["zero"]).zero())
+    init_fn, train_step, state_specs, _ = build_sparq(cfg, mesh, dcfg)
+    state = init_fn(jax.random.PRNGKey(0))
+    ssh = jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs,
+                       is_leaf=lambda x: isinstance(x, P))
+    state = jax.device_put(state, ssh)
+    rng = np.random.default_rng(1)
+    batch = {k: rng.integers(0, cfg.vocab_size, (4, 2, 32)).astype(np.int32)
+             for k in ("tokens", "labels")}
+    from repro.models.transformer import lm_loss
+    grads = jax.vmap(jax.grad(lambda p, b: lm_loss(cfg, p, b)[0]))(
+        state["params"], batch)
+    eta = float(dcfg.lr(0))
+    x_half = jax.tree.map(lambda p, g: p - eta * g, state["params"], grads)
+    state2, _ = jax.jit(train_step)(state, batch)
+    # reference: q = blockwise signtopk(frac=1) of x_half (x_hat=0) == full
+    # sign pattern; but with frac=1.0 every entry is selected and scale =
+    # mean|diff| per shard — verify consensus algebra with the actual x_hat:
+    topo = make_topology("ring", 4)
+    W = jnp.asarray(topo.w, jnp.float32)
+    xhat_new = state2["x_hat"]
+    gamma = topo.gamma_star(1.0)
+    def consensus(xh, xe):
+        mix = jnp.tensordot(W, xe, axes=1) - xe
+        return xh + gamma * mix
+    ref = jax.tree.map(consensus, x_half, xhat_new)
+    err = max(float(jnp.max(jnp.abs(a - b)))
+              for a, b in zip(jax.tree.leaves(ref),
+                              jax.tree.leaves(state2["params"])))
+    out["consensus_algebra_err"] = err
+
+    # Pallas-kernel compression path matches the jnp gossip path
+    s_k, l_k, _ = setup("dense", frac=0.1, kernel=True)
+    s_j, l_j, _ = setup("dense", frac=0.1, kernel=False)
+    out["kernel_loss_gap"] = abs(l_k[-1] - l_j[-1])
+    print("RESULT " + json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_dist_sparq_8_devices():
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=1200)
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+    # ring gossip == dense gossip on a ring graph (fp32 tolerance)
+    assert out["dense_ring_max_diff"] < 5e-3
+    # training makes progress
+    assert out["loss_last"] < out["loss_first"]
+    # bits were accounted and all 4 nodes triggered at some sync
+    assert out["bits"] > 0 and out["triggers"] > 0
+    # SPMD consensus step == host algebra of Algorithm 1, line 15
+    assert out["consensus_algebra_err"] < 1e-4
+    # kernel-compressed run tracks the jnp-compressed run
+    assert out["kernel_loss_gap"] < 0.15

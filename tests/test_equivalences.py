@@ -1,0 +1,122 @@
+"""Cross-path equivalences: every optimized/beyond-paper path must agree with
+its reference formulation on the same inputs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.models import attention as attn
+from repro.models.config import ModelConfig
+from repro.models.transformer import (chunked_ce, forward, init_params,
+                                      lm_loss)
+from repro.models.layers import lm_logits
+
+
+def test_causal_parts_equals_full_attention():
+    """causal_parts>1 (prefix-kv splitting) must be numerically identical to
+    one-shot causal attention."""
+    key = jax.random.PRNGKey(0)
+    b, s, h, hd = 2, 512, 4, 64
+    q = jax.random.normal(key, (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, hd))
+    pos = jnp.arange(s)
+    cfg1 = get_config("qwen1.5-0.5b").reduced()
+    cfg8 = dataclasses.replace(cfg1, causal_parts=4)
+    # use f32 scores for an exact comparison
+    full = attn.chunked_attention(q, k, v, pos, pos, q_chunk=128, k_chunk=128,
+                                  score_dtype=jnp.float32)
+    part = []
+    P = 4
+    step = s // P
+    for i in range(P):
+        part.append(attn.chunked_attention(
+            q[:, i * step:(i + 1) * step], k[:, :(i + 1) * step],
+            v[:, :(i + 1) * step], pos[i * step:(i + 1) * step],
+            pos[:(i + 1) * step], q_chunk=128, k_chunk=128,
+            score_dtype=jnp.float32))
+    part = jnp.concatenate(part, axis=1)
+    np.testing.assert_allclose(np.array(part), np.array(full), atol=2e-5)
+
+
+def test_mla_absorbed_decode_equals_naive_expansion():
+    """The absorbed (latent-space) MLA decode must match materializing
+    per-head K/V and doing standard attention."""
+    cfg = dataclasses.replace(get_config("deepseek-v3-671b").reduced(),
+                              compute_dtype="float32", param_dtype="float32")
+    key = jax.random.PRNGKey(1)
+    p = attn.init_mla(cfg, key)
+    b, s = 2, 8
+    xs = jax.random.normal(key, (b, s, cfg.d_model), jnp.float32) * 0.3
+    pos = jnp.arange(s)
+    y_naive = attn.mla_forward(cfg, p, xs, pos)           # expands K/V
+    cache = attn.init_mla_cache(cfg, b, s, n_layers=1)
+    ckv, kr, cpos = cache["ckv"][0], cache["kr"][0], cache["pos"][0]
+    outs = []
+    for t in range(s):
+        o, (ckv, kr, cpos) = attn.mla_decode(cfg, p, xs[:, t:t + 1],
+                                             ckv, kr, cpos, jnp.int32(t))
+        outs.append(o)
+    y_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.array(y_dec, np.float32),
+                               np.array(y_naive, np.float32), atol=0.03)
+
+
+def test_chunked_ce_equals_plain_ce():
+    cfg = get_config("stablelm-1.6b").reduced()
+    key = jax.random.PRNGKey(2)
+    params = init_params(cfg, key)
+    b, s = 2, 512  # > LOSS_CHUNK so the scan path runs
+    h = jax.random.normal(key, (b, s, cfg.d_model), jnp.float32) * 0.5
+    labels = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    fast = chunked_ce(cfg, params["embed"], h, labels)
+    logits = lm_logits(cfg, params["embed"], h).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, -1)
+    tgt = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    plain = jnp.mean(lse - tgt)
+    np.testing.assert_allclose(float(fast), float(plain), rtol=2e-5)
+
+
+def test_microbatch_grads_equal_full_batch():
+    """dist microbatching accumulates to the same gradients (linearity of
+    mean-CE over examples)."""
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    key = jax.random.PRNGKey(3)
+    params = init_params(cfg, key)
+    toks = jax.random.randint(key, (4, 64), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+
+    def loss(p, b):
+        return lm_loss(cfg, p, b)[0]
+
+    g_full = jax.grad(loss)(params, batch)
+    mb = 2
+    bs = jax.tree.map(lambda x: x.reshape((mb, 2) + x.shape[1:]), batch)
+
+    def acc(g_a, bmb):
+        g = jax.grad(loss)(params, bmb)
+        return jax.tree.map(lambda a, x: a + x / mb, g_a, g), None
+
+    zero = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+    g_acc, _ = jax.lax.scan(acc, zero, bs)
+    for a, b_ in zip(jax.tree.leaves(g_full), jax.tree.leaves(g_acc)):
+        # bf16 activations are computed in different batch groupings ->
+        # last-ulp differences on ~0.04-scale grads
+        np.testing.assert_allclose(np.array(a, np.float32),
+                                   np.array(b_, np.float32), atol=2e-3)
+
+
+def test_bf16_scores_close_to_f32_scores():
+    key = jax.random.PRNGKey(4)
+    b, s, h, hd = 2, 256, 4, 64
+    q = jax.random.normal(key, (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, hd))
+    pos = jnp.arange(s)
+    y16 = attn.chunked_attention(q, k, v, pos, pos, score_dtype=jnp.bfloat16)
+    y32 = attn.chunked_attention(q, k, v, pos, pos, score_dtype=jnp.float32)
+    err = float(jnp.max(jnp.abs(y16.astype(jnp.float32)
+                                - y32.astype(jnp.float32))))
+    assert err < 0.03  # bf16 softmax-weight rounding on O(1) outputs

@@ -1,0 +1,108 @@
+"""Pallas kernel sweeps: shapes x dtypes x k against the pure-jnp oracles
+(interpret=True executes the kernel body on CPU), plus operator-property checks
+of the blockwise compressor."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.qsgd import qsgd_blocks
+from repro.kernels.sign_topk import BLOCK, sign_topk_blocks
+
+
+@pytest.mark.parametrize("nb", [1, 2, 8, 16, 32])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("k_b", [1, 16, 128, 512])
+def test_sign_topk_kernel_matches_oracle(nb, dtype, k_b):
+    key = jax.random.PRNGKey(nb * 1000 + k_b)
+    xh = jax.random.normal(key, (nb * BLOCK,), dtype)
+    xe = 0.3 * jax.random.normal(jax.random.fold_in(key, 1),
+                                 (nb * BLOCK,), dtype)
+    for trig in (0.0, 1.0):
+        q_k, xn_k, sc_k = sign_topk_blocks(
+            xh.reshape(nb, BLOCK), xe.reshape(nb, BLOCK),
+            jnp.float32(trig), k_b)
+        q_r, xn_r, vals_r, idx_r = ref.sign_topk_ref(xh, xe,
+                                                     jnp.float32(trig), k_b)
+        np.testing.assert_allclose(
+            np.array(q_k.reshape(-1), np.float32),
+            np.array(q_r, np.float32), rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(
+            np.array(xn_k.reshape(-1), np.float32),
+            np.array(xn_r, np.float32), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k_b=st.integers(1, BLOCK // 2))
+def test_blockwise_signtopk_is_contraction(seed, k_b):
+    """The TPU-adapted blockwise SignTopK still satisfies Definition 1 with
+    omega >= 1/BLOCK per block (DESIGN.md §3)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4 * BLOCK,))
+    q, _, _, _ = ref.sign_topk_ref(x, jnp.zeros_like(x), jnp.float32(1.0), k_b)
+    num = float(jnp.sum((x - q) ** 2))
+    den = float(jnp.sum(x ** 2))
+    assert num / den <= 1.0 - 1.0 / BLOCK + 1e-6
+
+
+@pytest.mark.parametrize("nb", [1, 4, 16])
+@pytest.mark.parametrize("s", [4, 16, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_qsgd_kernel_matches_oracle(nb, s, dtype):
+    key = jax.random.PRNGKey(nb + s)
+    x = jax.random.normal(key, (nb * BLOCK,), dtype)
+    u = jax.random.uniform(jax.random.fold_in(key, 7), (nb * BLOCK,))
+    out_k = qsgd_blocks(x.reshape(nb, BLOCK), u.reshape(nb, BLOCK), s=s)
+    out_r = ref.qsgd_ref(x, u, s)
+    np.testing.assert_allclose(np.array(out_k.reshape(-1), np.float32),
+                               np.array(out_r, np.float32),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_qsgd_kernel_unbiased():
+    # s=64 keeps beta = min(d/s^2, sqrt(d)/s) = 0.25 so 256 draws average out
+    x = jax.random.normal(jax.random.PRNGKey(0), (BLOCK,))
+    outs = []
+    for i in range(256):
+        outs.append(ops.qsgd(x, jax.random.PRNGKey(i), s=64))
+    mean = jnp.mean(jnp.stack(outs), 0)
+    assert float(jnp.max(jnp.abs(mean - x))) < 0.15
+
+
+def test_fused_trigger_semantics():
+    x = jax.random.normal(jax.random.PRNGKey(1), (3 * BLOCK + 17,))
+    xe = 0.5 * x
+    sq = float(jnp.sum((x - xe) ** 2))
+    q, xn, trig = ops.trigger_compress_update(x, xe, jnp.float32(sq * 2), 32)
+    assert float(trig) == 0.0 and bool(jnp.all(q == 0))
+    np.testing.assert_allclose(np.array(xn), np.array(xe), atol=1e-7)
+    q, xn, trig = ops.trigger_compress_update(x, xe, jnp.float32(sq / 2), 32)
+    assert float(trig) == 1.0 and int(jnp.sum(q != 0)) >= 32
+    np.testing.assert_allclose(np.array(xn), np.array(xe + q), atol=1e-6)
+
+
+def test_ops_sign_topk_ragged_length():
+    """Flat wrapper pads to BLOCK multiples and un-pads the outputs."""
+    d = 2500
+    x = jax.random.normal(jax.random.PRNGKey(2), (d,))
+    q, vals, idx = ops.sign_topk(x, 250)
+    assert q.shape == (d,)
+    assert int(jnp.sum(q != 0)) >= 250 - 3  # ties may add, padding never selects
+    assert int(idx.max()) < 3 * BLOCK
+    # support of q is among the largest |x| per block (threshold semantics)
+    nz = np.nonzero(np.array(q))[0]
+    assert len(nz) > 0
+
+
+def test_xhat_update_closes_the_loop():
+    """Iterating q = C(x - x_hat); x_hat += q drives x_hat -> x (error feedback
+    contraction of the estimate — the property the consensus proof leans on)."""
+    x = jax.random.normal(jax.random.PRNGKey(3), (2 * BLOCK,))
+    xe = jnp.zeros_like(x)
+    errs = []
+    for _ in range(30):
+        q, xe, _ = ops.trigger_compress_update(x, xe, jnp.float32(0.0), 64)
+        errs.append(float(jnp.linalg.norm(x - xe) / jnp.linalg.norm(x)))
+    assert errs[-1] < 0.05
+    assert all(b <= a + 1e-6 for a, b in zip(errs, errs[1:]))

@@ -1,0 +1,103 @@
+"""Sharding-rule unit tests (AbstractMesh — no devices needed)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs.registry import get_config
+from repro.dist import sharding as sh
+from repro.models.transformer import init_cache, init_params
+
+MESH = AbstractMesh((16, 16, 2), ("node", "fsdp", "model"))
+# serve-view abstract mesh
+SMESH = AbstractMesh((16, 16), ("data", "model"))
+
+
+def _pshape(arch):
+    cfg = get_config(arch)
+    return cfg, jax.eval_shape(lambda k: init_params(cfg, k),
+                               jax.random.PRNGKey(0))
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "deepseek-v3-671b",
+                                  "mamba2-370m", "zamba2-7b"])
+def test_every_leaf_gets_a_divisible_spec(arch):
+    # build_sparq computes within-node specs on the UN-stacked tree and
+    # prepends the node axis — mirror that exactly
+    cfg, pshape = _pshape(arch)
+    specs = sh.param_specs(pshape, MESH, node_dim=False)
+    flat_p = jax.tree.leaves(pshape)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    for leaf, spec in zip(flat_p, flat_s):
+        node_spec = P("node", *spec)   # what the train state uses
+        full = tuple(node_spec) + (None,) * (
+            1 + len(leaf.shape) - len(node_spec))
+        for dim, ax in zip((16,) + leaf.shape, full):
+            if ax is None:
+                continue
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                assert dim % MESH.shape[a] == 0, (leaf.shape, node_spec)
+
+
+def test_embedding_vocab_not_divisible_is_replicated():
+    cfg, pshape = _pshape("mamba2-370m")  # vocab 50280 % 16 != 0
+    mesh = AbstractMesh((4, 1, 16), ("node", "fsdp", "model"))
+    specs = sh.param_specs(pshape, mesh, node_dim=False)
+    emb_spec = specs["embed"]["embedding"]
+    assert emb_spec[0] is None  # vocab dim replicated over 'model'
+
+
+def test_moe_experts_sharded_over_model():
+    cfg, pshape = _pshape("deepseek-v3-671b")
+    specs = sh.param_specs(pshape, MESH, node_dim=False)
+    # find a stacked expert tensor (L, E, D, F)
+    wg = specs["seg1"]["moe"]["w_gate"]
+    assert "model" in tuple(wg)  # expert dim sharded (expert parallelism)
+
+
+def test_cache_specs_decode():
+    cfg = get_config("qwen1.5-32b")
+    cshape = jax.eval_shape(lambda: init_cache(cfg, 128, 1024))
+    specs = sh.cache_specs(cshape, SMESH)
+    k_spec = specs["kv"]["k"]  # (L, B, C, H, hd)
+    assert k_spec[1] == "data"          # batch over data
+    assert "model" in tuple(k_spec)     # heads or hd over model
+    pos_spec = specs["kv"]["pos"]
+    assert all(a is None for a in pos_spec)
+
+
+def test_train_batch_specs():
+    bshape = {"tokens": jax.ShapeDtypeStruct((16, 16, 4096), jnp.int32)}
+    specs = sh.train_batch_specs(bshape, MESH)
+    assert specs["tokens"] == P("node", "fsdp", None)
+    # non-divisible per-node batch stays unsharded on fsdp
+    bshape2 = {"tokens": jax.ShapeDtypeStruct((16, 3, 4096), jnp.int32)}
+    specs2 = sh.train_batch_specs(bshape2, MESH)
+    assert specs2["tokens"] == P("node", None, None)
+
+
+def test_train_mesh_reshape_properties():
+    """The logical view must be a pure reshape of the production devices."""
+    import numpy as np
+
+    class FakeMesh:
+        def __init__(self, shape):
+            self.devices = np.arange(np.prod(shape)).reshape(shape)
+    import dataclasses
+    cfg = get_config("qwen1.5-0.5b")  # n_nodes 16
+
+    prod = FakeMesh((16, 16))
+    # can't build a jax Mesh from ints; check the factorization logic only
+    devs = prod.devices
+    n_nodes, model = cfg.n_nodes, devs.shape[-1]
+    fsdp = devs.size // model // n_nodes
+    assert (n_nodes, fsdp, model) == (16, 1, 16)
+    re = devs.reshape(n_nodes, fsdp, model)
+    assert np.array_equal(re.reshape(devs.shape), devs)
+
+    cfg2 = get_config("deepseek-v3-671b")  # n_nodes 2, pod->fsdp? default node
+    prod3 = FakeMesh((2, 16, 16))
+    n_nodes2 = cfg2.n_nodes * (2 if cfg2.pod_axis_to == "node" else 1)
+    fsdp2 = prod3.devices.size // 16 // n_nodes2
+    assert fsdp2 * 16 * n_nodes2 == 512

@@ -1,0 +1,128 @@
+"""Algorithm 1 engine: convergence, baseline equivalences, bit accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines
+from repro.core.compression import Identity, SignTopK, TopK, make_compressor
+from repro.core.schedule import decaying, fixed
+from repro.core.sparq import SparqConfig, init_state, make_step, run, run_scan
+from repro.core.topology import make_topology
+from repro.core.triggers import constant, zero
+
+N, D = 8, 32
+
+
+def quad_problem(seed=0, noise=0.1):
+    b = jax.random.normal(jax.random.PRNGKey(seed), (N, D))
+    opt = jnp.mean(b, 0)
+
+    def grad_fn(x, t, k):
+        return (x - b) + noise * jax.random.normal(k, x.shape)
+
+    return grad_fn, opt
+
+
+def test_sparq_converges_strongly_convex():
+    grad_fn, opt = quad_problem()
+    topo = make_topology("ring", N)
+    cfg = SparqConfig(topology=topo, compressor=SignTopK(k=8),
+                      threshold=constant(10.0), lr=decaying(2.0, 20.0),
+                      H=5, gamma=0.3)
+    st, _ = run(cfg, grad_fn, jnp.zeros(D), 800, jax.random.PRNGKey(1))
+    xbar = jnp.mean(st.x, 0)
+    assert float(jnp.linalg.norm(xbar - opt)) < 0.05
+    # consensus: nodes near the average
+    assert float(jnp.linalg.norm(st.x - xbar[None])) < 2.0
+
+
+def test_choco_equals_sparq_h1_c0():
+    """CHOCO-SGD is exactly SPARQ-SGD with H=1, c_t=0."""
+    grad_fn, _ = quad_problem()
+    topo = make_topology("ring", N)
+    comp = TopK(k=8)
+    lr = decaying(1.0, 50.0)
+    cfg_sparq = SparqConfig(topology=topo, compressor=comp, threshold=zero(),
+                            lr=lr, H=1, gamma=0.4)
+    cfg_choco = baselines.choco_config(topo, comp, lr, gamma=0.4)
+    s1 = run_scan(cfg_sparq, grad_fn, jnp.zeros(D), 100, jax.random.PRNGKey(2))
+    s2 = run_scan(cfg_choco, grad_fn, jnp.zeros(D), 100, jax.random.PRNGKey(2))
+    np.testing.assert_allclose(np.array(s1.x), np.array(s2.x), rtol=1e-6)
+    assert float(s1.bits) == float(s2.bits)
+
+
+def test_sparq_identity_gamma1_equals_vanilla():
+    """With C=identity, H=1, c=0, gamma=1: x_hat == x_half, so the consensus
+    step is exactly X W — vanilla decentralized SGD."""
+    grad_fn, _ = quad_problem(noise=0.0)
+    topo = make_topology("ring", N)
+    cfg = SparqConfig(topology=topo, compressor=Identity(), threshold=zero(),
+                      lr=fixed(0.05), H=1, gamma=1.0)
+    step = jax.jit(make_step(cfg, grad_fn))
+    vstep = jax.jit(baselines.make_vanilla_step(topo, fixed(0.05), grad_fn))
+    s = init_state(jnp.ones(D), N)
+    v = baselines.init_vanilla(jnp.ones(D), N)
+    for i in range(20):
+        k = jax.random.PRNGKey(i)
+        s = step(s, k)
+        v = vstep(v, k)
+    np.testing.assert_allclose(np.array(s.x), np.array(v.x), atol=1e-5)
+
+
+def test_trigger_reduces_communication():
+    grad_fn, _ = quad_problem()
+    topo = make_topology("ring", N)
+    lr = decaying(1.0, 50.0)
+    base = dict(topology=topo, compressor=SignTopK(k=4), lr=lr, H=5, gamma=0.3)
+    s_no = run_scan(SparqConfig(threshold=zero(), **base), grad_fn,
+                    jnp.zeros(D), 300, jax.random.PRNGKey(3))
+    s_tr = run_scan(SparqConfig(threshold=constant(1e4), **base), grad_fn,
+                    jnp.zeros(D), 300, jax.random.PRNGKey(3))
+    assert float(s_tr.bits) < float(s_no.bits)
+    assert int(s_tr.triggers) < int(s_no.triggers)
+    assert int(s_tr.sync_rounds) == int(s_no.sync_rounds) == 60
+
+
+def test_local_steps_reduce_rounds():
+    grad_fn, _ = quad_problem()
+    topo = make_topology("ring", N)
+    lr = decaying(1.0, 50.0)
+    for H, expected in ((1, 100), (5, 20), (10, 10)):
+        cfg = SparqConfig(topology=topo, compressor=Identity(), lr=lr, H=H)
+        s = run_scan(cfg, grad_fn, jnp.zeros(D), 100, jax.random.PRNGKey(0))
+        assert int(s.sync_rounds) == expected
+
+
+def test_bits_accounting_formula():
+    """One sync round of a triggered ring node sends payload+flag to 2 nbrs."""
+    from repro.core import bits as bits_mod
+    grad_fn, _ = quad_problem(noise=0.0)
+    topo = make_topology("ring", N)
+    comp = SignTopK(k=4)
+    cfg = SparqConfig(topology=topo, compressor=comp, threshold=zero(),
+                      lr=fixed(0.1), H=1, gamma=0.3)
+    s = run_scan(cfg, grad_fn, jnp.zeros(D), 1, jax.random.PRNGKey(0))
+    per_node = bits_mod.FLAG_BITS + comp.bits(D)
+    assert float(s.bits) == pytest.approx(N * 2 * per_node)
+
+
+def test_centralized_baseline_converges():
+    grad_fn, opt = quad_problem()
+    step = baselines.make_central_step(N, decaying(2.0, 20.0), grad_fn)
+    st = baselines.init_central(jnp.zeros(D))
+    stj = jax.jit(step)
+    for i in range(400):
+        st = stj(st, jax.random.PRNGKey(i))
+    assert float(jnp.linalg.norm(st.x - opt)) < 0.05
+
+
+def test_momentum_variant_runs():
+    grad_fn, opt = quad_problem()
+    topo = make_topology("ring", N)
+    cfg = SparqConfig(topology=topo, compressor=SignTopK(k=8),
+                      threshold=constant(1.0), lr=fixed(0.02), H=5,
+                      gamma=0.3, momentum=0.9)
+    s = run_scan(cfg, grad_fn, jnp.zeros(D), 300, jax.random.PRNGKey(1))
+    assert float(jnp.linalg.norm(jnp.mean(s.x, 0) - opt)) < 0.5
+    assert not bool(jnp.any(jnp.isnan(s.x)))

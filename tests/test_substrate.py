@@ -1,0 +1,153 @@
+"""Optimizers, data pipeline, checkpointing, schedules, triggers."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.core import schedule as sched
+from repro.core import triggers
+from repro.data.synthetic import (TokenPipeline, convex_dataset,
+                                  logistic_loss_and_grad)
+from repro.optim.sgd import adamw, make_optimizer, momentum, sgd
+
+
+# ---------------------------------------------------------------- optimizers
+
+@pytest.mark.parametrize("opt", [sgd(), momentum(0.9), adamw()])
+def test_optimizer_minimizes_quadratic(opt):
+    params = {"w": jnp.array([3.0, -2.0]), "b": jnp.array([1.0])}
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    state = opt.init(params)
+    lr = 0.05
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, lr)
+    assert float(loss(params)) < 1e-3
+
+
+def test_make_optimizer_names():
+    assert make_optimizer("sgd").name == "sgd"
+    assert make_optimizer("momentum", beta=0.8).name == "momentum(0.8)"
+    assert make_optimizer("adamw").name == "adamw"
+
+
+# ---------------------------------------------------------------- schedules
+
+def test_theorem1_lr_constants():
+    mu, L, H, p = 0.5, 2.0, 5, 0.01
+    lr = sched.theorem1_lr(mu, L, H, p)
+    a = max(5 * H / p, 32 * L / mu)
+    assert float(lr(0)) == pytest.approx(8.0 / (mu * a))
+    # eta_t <= 1/4L required by the proof
+    assert float(lr(0)) <= 1.0 / (4 * L) + 1e-9
+
+
+def test_theorem2_lr():
+    lr = sched.theorem2_lr(n=16, T=1024)
+    assert float(lr(0)) == pytest.approx((16 / 1024) ** 0.5)
+    assert float(lr(500)) == float(lr(0))  # fixed
+
+
+def test_warmup_piecewise():
+    lr = sched.warmup_piecewise(1.0, warmup=10, milestones=[100, 200],
+                                factor=0.2)
+    assert float(lr(0)) == pytest.approx(0.1)
+    assert float(lr(9)) == pytest.approx(1.0)
+    assert float(lr(150)) == pytest.approx(0.2)
+    assert float(lr(250)) == pytest.approx(0.04)
+
+
+def test_sync_masks():
+    m = sched.periodic_sync_mask(10, 3)
+    assert list(np.array(m)) == [False, False, True] * 3 + [False]
+    assert bool(sched.is_sync(2, 3)) and not bool(sched.is_sync(3, 3))
+
+
+def test_threshold_schedules():
+    c = triggers.poly(2.0, eps=0.5)
+    assert float(c(0)) == pytest.approx(2.0)   # max(t,1)
+    assert float(c(100)) == pytest.approx(20.0)
+    pw = triggers.piecewise(2.0, 1.0, every=10, until=60)
+    assert float(pw(0)) == 2.0
+    assert float(pw(25)) == 4.0
+    assert float(pw(1000)) == 8.0  # frozen after `until`
+    z = triggers.zero()
+    assert float(z(57)) == 0.0
+
+
+# ---------------------------------------------------------------- data
+
+def test_token_pipeline_deterministic_and_heterogeneous():
+    pipe = TokenPipeline(vocab_size=100, seq_len=32, batch_per_node=4,
+                         n_nodes=4, seed=7)
+    b1 = pipe.batch(0, 0)
+    b2 = pipe.batch(0, 0)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = pipe.batch(1, 0)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    g = pipe.global_batch(0)
+    assert g["tokens"].shape == (4, 4, 32)
+    np.testing.assert_array_equal(g["tokens"][0], b1["tokens"])
+    # labels are the next-token shift
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+def test_convex_dataset_skew():
+    X, Y = convex_dataset(n_nodes=6, samples_per_node=300, n_features=20,
+                          n_classes=10, skew=0.8, seed=0)
+    assert X.shape == (6, 300, 20)
+    # each node over-represents its two home classes
+    for i in range(6):
+        home = {i % 10, (i + 1) % 10}
+        frac = np.isin(Y[i], list(home)).mean()
+        assert frac > 0.5
+
+
+def test_logistic_grad_matches_finite_diff():
+    loss, make_grad_fn, full_loss = logistic_loss_and_grad(3)
+    X, Y = convex_dataset(2, 50, n_features=5, n_classes=3, seed=1)
+    Xj, Yj = jnp.asarray(X), jnp.asarray(Y)
+    x0 = 0.1 * jax.random.normal(jax.random.PRNGKey(0), (15,))
+    g = jax.grad(lambda x: full_loss(x, Xj, Yj))(x0)
+    eps = 1e-4
+    for i in (0, 7, 14):
+        e = jnp.zeros(15).at[i].set(eps)
+        fd = (full_loss(x0 + e, Xj, Yj) - full_loss(x0 - e, Xj, Yj)) / (2 * eps)
+        assert float(jnp.abs(fd - g[i])) < 1e-3
+
+
+# ---------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "nested": {"b": jnp.ones((2, 2), jnp.bfloat16),
+                       "c": jnp.array(7, jnp.int32)}}
+    d = str(tmp_path / "ckpts")
+    path = ckpt.save(d, 42, tree, extra={"note": "hi"})
+    assert os.path.isdir(path)
+    assert ckpt.latest_step(d) == 42
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored = ckpt.restore(d, 42, like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path / "c")
+    ckpt.save(d, 0, {"a": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        ckpt.restore(d, 0, {"a": jnp.zeros((3, 3))})
+
+
+def test_checkpoint_overwrite_is_atomic(tmp_path):
+    d = str(tmp_path / "c")
+    ckpt.save(d, 1, {"a": jnp.zeros(4)})
+    ckpt.save(d, 1, {"a": jnp.ones(4)})
+    out = ckpt.restore(d, 1, {"a": jnp.zeros(4)})
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.ones(4))

@@ -1,0 +1,55 @@
+"""Mixing-matrix invariants: symmetric doubly stochastic, delta > 0 for connected
+graphs, Lemma 6 constants in range."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import Topology, make_topology
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(3, 40), kind=st.sampled_from(["ring", "complete"]),
+       mixing=st.sampled_from(["uniform", "metropolis"]))
+def test_doubly_stochastic(n, kind, mixing):
+    t = make_topology(kind, n, mixing=mixing)
+    w = t.w
+    assert np.allclose(w, w.T)
+    assert np.allclose(w.sum(0), 1.0)
+    assert np.allclose(w.sum(1), 1.0)
+    assert (w >= -1e-12).all()
+    assert t.delta > 0
+
+
+def test_torus_and_expander():
+    t = make_topology("torus2d", 16)
+    assert t.delta > 0
+    e = make_topology("expander", 16, deg=4, seed=1)
+    assert e.delta > 0
+    # expanders beat rings on spectral gap at equal size
+    r = make_topology("ring", 16)
+    assert e.delta > r.delta
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(3, 30), omega=st.floats(0.01, 1.0))
+def test_gamma_star_valid(n, omega):
+    t = make_topology("ring", n)
+    g = t.gamma_star(omega)
+    assert 0 < g <= 1.0
+    p = t.p(omega)
+    # paper: p >= delta^2 * omega / 644
+    assert p >= t.delta ** 2 * omega / 644 - 1e-12
+
+
+def test_spectral_gap_known_values():
+    # complete graph with uniform mixing: W = (1/n) 11^T exactly -> delta = 1
+    t = make_topology("complete", 8)
+    assert t.delta == pytest.approx(1.0, abs=1e-9)
+    # ring of 2 nodes is a single edge: delta = 1 with uniform 1/2 weights
+    t2 = make_topology("ring", 2)
+    assert t2.delta == pytest.approx(1.0, abs=1e-9)
+
+
+def test_neighbors():
+    t = make_topology("ring", 6)
+    assert set(t.neighbors(0)) == {1, 5}
