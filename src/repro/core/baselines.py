@@ -36,6 +36,7 @@ class VanillaState(NamedTuple):
     mom: jax.Array
     t: jax.Array
     bits: jax.Array
+    bits_c: jax.Array       # Kahan compensation (see core/bits.py)
 
 
 def make_vanilla_step(topology: Topology, lr: LRSchedule, grad_fn: GradFn,
@@ -55,16 +56,19 @@ def make_vanilla_step(topology: Topology, lr: LRSchedule, grad_fn: GradFn,
             mom, upd = state.mom, g
         x_half = state.x - eta * upd
         x_new = (x_half.T @ W.T).T          # X W  (W symmetric)
-        new_bits = state.bits + jnp.sum(deg) * bits_mod.dense_bits(d)
-        return VanillaState(x=x_new, mom=mom, t=state.t + 1, bits=new_bits)
+        new_bits, new_c = bits_mod.acc_add(
+            state.bits, state.bits_c, jnp.sum(deg) * bits_mod.dense_bits(d))
+        return VanillaState(x=x_new, mom=mom, t=state.t + 1, bits=new_bits,
+                            bits_c=new_c)
 
     return step
 
 
 def init_vanilla(x0: jax.Array, n: int) -> VanillaState:
     x = jnp.broadcast_to(x0, (n, x0.shape[-1])) if x0.ndim == 1 else x0
+    bits0, bits_c0 = bits_mod.acc_init()
     return VanillaState(x=x, mom=jnp.zeros_like(x), t=jnp.int32(0),
-                        bits=jnp.float32(0.0))
+                        bits=bits0, bits_c=bits_c0)
 
 
 class CentralState(NamedTuple):
@@ -72,6 +76,7 @@ class CentralState(NamedTuple):
     mom: jax.Array
     t: jax.Array
     bits: jax.Array
+    bits_c: jax.Array
 
 
 def make_central_step(n: int, lr: LRSchedule, grad_fn: GradFn,
@@ -89,16 +94,19 @@ def make_central_step(n: int, lr: LRSchedule, grad_fn: GradFn,
         else:
             mom, upd = state.mom, g
         # ring all-reduce: each node sends 2(n-1)/n * 32d bits
-        new_bits = state.bits + n * 2.0 * (n - 1) / n * bits_mod.dense_bits(d)
+        new_bits, new_c = bits_mod.acc_add(
+            state.bits, state.bits_c,
+            jnp.asarray(n * 2.0 * (n - 1) / n * bits_mod.dense_bits(d)))
         return CentralState(x=state.x - eta * upd, mom=mom, t=state.t + 1,
-                            bits=new_bits)
+                            bits=new_bits, bits_c=new_c)
 
     return step
 
 
 def init_central(x0: jax.Array) -> CentralState:
+    bits0, bits_c0 = bits_mod.acc_init()
     return CentralState(x=x0, mom=jnp.zeros_like(x0), t=jnp.int32(0),
-                        bits=jnp.float32(0.0))
+                        bits=bits0, bits_c=bits_c0)
 
 
 def run_generic(step, state, T: int, key: jax.Array, record_every: int = 0,

@@ -17,9 +17,42 @@ Conventions:
 from __future__ import annotations
 
 import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
 
 FLOAT_BITS = 32.0
 FLAG_BITS = 1.0
+
+
+# ---------------------------------------------------------------- accumulation
+#
+# Bit totals are exact integers that quickly exceed float32's 2^24 contiguous
+# integer range (a few hundred sync rounds at LM scale): naive float32
+# accumulation silently stagnates — increments smaller than the total's ulp
+# vanish. We accumulate in float64 when x64 is enabled, and otherwise keep a
+# Kahan compensation term so increments are never dropped.
+
+def acc_dtype() -> jnp.dtype:
+    """Widest float dtype available for bit accumulators."""
+    return jnp.dtype(jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+
+
+def acc_init() -> Tuple[jax.Array, jax.Array]:
+    """(total, compensation) accumulator pair, both scalars of acc_dtype().
+
+    Distinct buffers on purpose: donated train states must not alias."""
+    return jnp.zeros((), acc_dtype()), jnp.zeros((), acc_dtype())
+
+
+def acc_add(total: jax.Array, comp: jax.Array, inc: jax.Array
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Kahan-compensated add: returns the updated (total, compensation)."""
+    inc = inc.astype(total.dtype)
+    y = inc - comp
+    t = total + y
+    return t, (t - total) - y
 
 
 def dense_bits(d: int) -> float:

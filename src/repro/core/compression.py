@@ -18,14 +18,15 @@ Every operator also reports the number of bits a real network message would carr
 (``bits(shape)``); see core/bits.py for the formulas.
 
 All operators are pure-jnp, jit/vmap friendly, and operate on flat vectors; pytrees are
-handled by ``compress_tree`` in core/sparq.py (per-leaf, matching the paper's Section 5.2
-per-tensor treatment).
+handled by ``compress_tree`` below (per-leaf, matching the paper's Section 5.2
+per-tensor treatment) — the primitive shared by the reference engine wrappers and the
+distributed runtime (dist/sparq_dist.py).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -267,6 +268,32 @@ class TopFrac(SignTopK):
 
     def bits(self, d):
         return bits_mod.signtopk_bits(d, self._k(d))
+
+
+def compress_tree(comp: Compressor, tree: Any,
+                  key: Optional[jax.Array] = None) -> Any:
+    """Per-tensor compression of a pytree (paper Section 5.2).
+
+    Each leaf is flattened, compressed with ``comp``, and reshaped back; a
+    stochastic compressor gets an independent key per leaf. This is the single
+    pytree seam both engines use: the (n, d) reference engine applies it
+    through a ravel/unravel wrapper, the distributed engine vmaps it over the
+    node axis of its stacked parameter tree.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    if key is None:
+        keys = [None] * len(leaves)
+    else:
+        keys = list(jax.random.split(key, max(len(leaves), 1)))
+    out = [comp(leaf.reshape(-1), k).reshape(leaf.shape)
+           for leaf, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def tree_payload_bits(comp: Compressor, tree: Any) -> float:
+    """Total message payload bits for one per-tensor-compressed pytree."""
+    return float(sum(comp.bits(math.prod(leaf.shape) or 1)
+                     for leaf in jax.tree.leaves(tree)))
 
 
 _REGISTRY = {

@@ -38,6 +38,34 @@ GradFn = Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
 # grad_fn(x: (n, d), t: int32 scalar, key) -> (n, d) stochastic gradients
 
 
+# ------------------------------------------------------------ shared primitives
+#
+# The distributed runtime (dist/sparq_dist.py) applies Algorithm 1 per tensor
+# over a node-stacked model pytree; these functions are the single source of
+# truth for the trigger, the consensus mixing and the bit accounting so the two
+# engines cannot drift (tests/test_dist_equivalence.py pins the equivalence).
+
+def trigger_mask(sq_dist: jax.Array, c_t: jax.Array, eta: jax.Array) -> jax.Array:
+    """Line 7 event trigger: ||x^{t+1/2} - x_hat||^2 > c_t eta_t^2, per node."""
+    return sq_dist > c_t * eta * eta
+
+
+def gossip_mix(W: jax.Array, x_hat: jax.Array) -> jax.Array:
+    """Line 15 consensus term sum_j w_ij x_hat_j - x_hat_i.
+
+    ``x_hat`` carries the node axis first and any trailing shape; the contraction
+    is over that leading axis (for (n, d) matrices this is (W - I) X_hat)."""
+    return jnp.tensordot(W, x_hat, axes=1) - x_hat
+
+
+def sync_message_bits(trig: jax.Array, deg: jax.Array,
+                      payload_bits: float) -> jax.Array:
+    """Bits all nodes send at one sync index: flag + trig * payload to each of
+    deg_i neighbors (core/bits.py conventions)."""
+    msg = bits_mod.FLAG_BITS + trig.astype(jnp.float32) * payload_bits
+    return jnp.sum(msg * deg)
+
+
 @dataclasses.dataclass(frozen=True)
 class SparqConfig:
     topology: Topology
@@ -66,7 +94,9 @@ class SparqState(NamedTuple):
     x_hat: jax.Array        # (n, d) public estimates
     mom: jax.Array          # (n, d) momentum buffers (zeros when momentum == 0)
     t: jax.Array            # () int32 step counter
-    bits: jax.Array         # () float64-ish total bits transmitted (all links)
+    bits: jax.Array         # () total bits transmitted (all links); float64
+                            # under x64, else Kahan-compensated float32
+    bits_c: jax.Array       # () Kahan compensation for `bits`
     sync_rounds: jax.Array  # () int32 number of sync indices so far
     triggers: jax.Array     # () int32 number of (node, sync) trigger events
 
@@ -75,8 +105,9 @@ def init_state(x0: jax.Array, n: int) -> SparqState:
     """x0: (d,) shared init or (n, d) per-node init."""
     x = jnp.broadcast_to(x0, (n, x0.shape[-1])) if x0.ndim == 1 else x0
     z = jnp.zeros_like(x)
+    bits0, bits_c0 = bits_mod.acc_init()
     return SparqState(x=x, x_hat=z, mom=z, t=jnp.int32(0),
-                      bits=jnp.float32(0.0), sync_rounds=jnp.int32(0),
+                      bits=bits0, bits_c=bits_c0, sync_rounds=jnp.int32(0),
                       triggers=jnp.int32(0))
 
 
@@ -109,28 +140,29 @@ def make_step(cfg: SparqConfig, grad_fn: GradFn):
             c_t = cfg.threshold(state.t)
             diff = x_half - state.x_hat                       # (n, d)
             sq = jnp.sum(diff * diff, axis=-1)                # (n,)
-            trig = sq > c_t * eta * eta                       # (n,) bool
+            trig = trigger_mask(sq, c_t, eta)                 # (n,) bool
             keys = jax.random.split(kc, n)
             q = jax.vmap(lambda v, k: comp(v, k))(diff, keys)
             q = q * trig[:, None].astype(q.dtype)             # line 11: send 0
             x_hat_new = state.x_hat + q                       # line 13
-            mix = x_hat_new.T @ (W - jnp.eye(n, dtype=W.dtype))
-            x_new = x_half + gamma * mix.T                    # line 15
-            msg = bits_mod.FLAG_BITS + trig.astype(jnp.float32) * payload_bits(d)
-            new_bits = state.bits + jnp.sum(msg * deg)
-            return (x_new, x_hat_new, new_bits,
+            x_new = x_half + gamma * gossip_mix(W, x_hat_new)  # line 15
+            new_bits, new_bits_c = bits_mod.acc_add(
+                state.bits, state.bits_c,
+                sync_message_bits(trig, deg, payload_bits(d)))
+            return (x_new, x_hat_new, new_bits, new_bits_c,
                     state.sync_rounds + 1,
                     state.triggers + jnp.sum(trig).astype(jnp.int32))
 
         def local_branch(_):
-            return (x_half, state.x_hat, state.bits, state.sync_rounds,
-                    state.triggers)
+            return (x_half, state.x_hat, state.bits, state.bits_c,
+                    state.sync_rounds, state.triggers)
 
         do_sync = ((state.t + 1) % H) == 0
-        x_new, x_hat_new, new_bits, rounds, trigs = jax.lax.cond(
+        x_new, x_hat_new, new_bits, new_bits_c, rounds, trigs = jax.lax.cond(
             do_sync, sync_branch, local_branch, operand=None)
         return SparqState(x=x_new, x_hat=x_hat_new, mom=mom, t=state.t + 1,
-                          bits=new_bits, sync_rounds=rounds, triggers=trigs)
+                          bits=new_bits, bits_c=new_bits_c,
+                          sync_rounds=rounds, triggers=trigs)
 
     return step
 

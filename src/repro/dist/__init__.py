@@ -1,0 +1,20 @@
+"""Distributed SPARQ runtime: the production realization of the engine API.
+
+Two logical views of the production device grid (launch/mesh.py):
+
+* train view  — ``(node, fsdp, model)``: ``node`` carries the decentralized
+  SPARQ ensemble (one model replica per graph node), ``fsdp`` shards each
+  replica's parameters/optimizer state within a node, ``model`` is
+  tensor/expert parallelism. Built by :func:`repro.dist.sharding.train_mesh`.
+* serve view  — ``(data, model)``: plain batch + tensor parallel inference.
+  Built by :func:`repro.dist.sharding.serve_mesh`.
+
+Engine contract (shared with the dense reference engine in core/sparq.py):
+``build_sparq(cfg, mesh, dcfg) -> (init_fn, train_step, state_specs, pshape)``
+where every leaf of the train state carries a leading node axis, and the
+trigger/compress/mix/bit-accounting primitives are the ones in
+``core.sparq`` / ``core.compression`` — pytree-first, so the same code path
+serves a 7-leaf toy model and a 671B MoE.
+"""
+from repro.dist import serve, sharding  # noqa: F401
+from repro.dist.sparq_dist import DistSparqConfig, build_sparq  # noqa: F401

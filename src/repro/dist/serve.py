@@ -1,0 +1,113 @@
+"""Serve-view engines over the (data, model) mesh: batched prefill and cached
+decode, the entry points launch/dryrun.py lowers for the roofline analysis.
+
+Both builders return ``(step_fn, shardings_fn)``: the step closes over the
+model config and mesh, and ``shardings_fn`` maps ShapeDtypeStruct trees (from
+:func:`serve_shapes`) to NamedShardings so callers can lower without ever
+allocating buffers. Parameters shard over ``model`` only (replicated over
+``data``) using the same per-leaf rules as the train view
+(``sharding.param_specs`` — the fsdp axis simply does not exist here);
+activations pin their batch dim to ``data`` via ``cfg.batch_axes`` so GSPMD
+never replicates the embedding gather across data shards.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as sh
+from repro.models.config import InputShape, ModelConfig
+from repro.models.transformer import (decode_step, forward, init_cache,
+                                      init_params)
+
+
+def serve_shapes(cfg: ModelConfig, shape: InputShape, cache_len: int
+                 ) -> Tuple[Any, Any, Optional[jax.ShapeDtypeStruct],
+                            Optional[jax.ShapeDtypeStruct],
+                            jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for one serve workload:
+    ``(params, cache, tokens, embeds, pos)``.
+
+    Audio/VLM families take precomputed frontend ``embeds`` instead of
+    ``tokens`` (the unused one is None). ``cache`` is sized for decode;
+    prefill callers simply ignore it."""
+    B = shape.global_batch
+    S = 1 if shape.is_decode else shape.seq_len
+    pshape = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    cshape = jax.eval_shape(lambda: init_cache(cfg, B, cache_len))
+    if cfg.family in ("audio", "vlm"):
+        tok = None
+        emb = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.float32)
+    else:
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        emb = None
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return pshape, cshape, tok, emb, pos
+
+
+def _serve_param_shardings(pshape, mesh, embed_mode: str):
+    specs = sh.param_specs(pshape, mesh)
+    model = dict(mesh.shape).get("model", 1)
+    if model > 1 and "embed" in specs:
+        emb = pshape["embed"]["embedding"].shape          # (V, D)
+        vocab_fits, d_fits = emb[0] % model == 0, emb[1] % model == 0
+        if embed_mode == "vocab" and vocab_fits:
+            specs["embed"]["embedding"] = P("model", None)
+            if "lm_head" in specs["embed"]:
+                specs["embed"]["lm_head"] = P(None, "model")
+        elif embed_mode == "dmodel" and d_fits:
+            specs["embed"]["embedding"] = P(None, "model")
+            if "lm_head" in specs["embed"]:
+                specs["embed"]["lm_head"] = P("model", None)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_sharding(mesh, sds):
+    """Shard the batch dim over ``data`` when divisible, else replicate."""
+    if sds is None:
+        return None
+    data = dict(mesh.shape).get("data", 1)
+    lead = "data" if data > 1 and sds.shape[0] % data == 0 else None
+    return NamedSharding(
+        mesh, P(lead, *([None] * (len(sds.shape) - 1))))
+
+
+def build_prefill(cfg: ModelConfig, mesh, *, embed_mode: str = "vocab"):
+    """Full-sequence forward -> logits. ``embed_mode`` picks which embedding
+    dim lives on ``model`` ("vocab" or "dmodel")."""
+    cfg = dataclasses.replace(cfg, batch_axes=("data",))
+
+    def prefill(params, tokens, embeds):
+        logits, _ = forward(cfg, params, tokens, embeds=embeds)
+        return logits
+
+    def shardings(pshape, tok, emb):
+        ps = _serve_param_shardings(pshape, mesh, embed_mode)
+        return ps, _batch_sharding(mesh, tok), _batch_sharding(mesh, emb)
+
+    return prefill, shardings
+
+
+def build_decode(cfg: ModelConfig, mesh, *, cache_mode: str = "auto"):
+    """One-token cached decode -> (logits, new_cache). ``cache_mode`` picks
+    the model-axis placement of cache leaves (see sharding.cache_specs)."""
+    cfg = dataclasses.replace(cfg, batch_axes=("data",))
+
+    def decode(params, cache, tokens, embeds, pos):
+        return decode_step(cfg, params, cache, tokens, pos, embeds=embeds)
+
+    def shardings(pshape, cshape, tok, emb):
+        ps = _serve_param_shardings(pshape, mesh, "vocab")
+        cspecs = sh.cache_specs(cshape, mesh, cache_mode=cache_mode)
+        cs = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+        return (ps, cs, _batch_sharding(mesh, tok),
+                _batch_sharding(mesh, emb), NamedSharding(mesh, P()))
+
+    return decode, shardings

@@ -1,0 +1,153 @@
+"""Mesh factorization and sharding rules for the SPARQ runtime.
+
+The production mesh is a plain device grid (``(data, model)`` or
+``(pod, data, model)``, launch/mesh.py); the runtime re-views it:
+
+* :func:`train_mesh`  — ``(node, fsdp, model)``; a pure reshape of the
+  production devices, so switching views never moves data between hosts.
+* :func:`serve_mesh`  — ``(data, model)``; any pod axis folds into data.
+
+Spec rules (pinned by tests/test_sharding_specs.py):
+
+* an axis is only assigned to a tensor dim it divides; size-1 axes are never
+  named (replicated instead) so specs read the same on degenerate meshes;
+* stacked MoE expert tensors ``(L, E, ...)`` put the expert dim on ``model``
+  (expert parallelism); everything else puts ``model`` on the rightmost
+  divisible dim (tensor parallelism) and ``fsdp`` on the largest remaining
+  divisible dim;
+* :func:`param_specs` computes within-node specs on the UN-stacked parameter
+  tree; the train state prepends the ``node`` axis (``node_dim=True`` does it
+  for you).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+# ------------------------------------------------------------------ mesh views
+
+def train_mesh(prod_mesh, cfg) -> Mesh:
+    """(node, fsdp, model) logical view — a pure reshape of the production
+    devices. The model axis keeps the production minor axis (ICI-nearest);
+    a pod axis multiplies nodes (``cfg.pod_axis_to == "node"``) or fsdp.
+    The node axis is the largest factor of the non-model grid that divides
+    the ensemble size, so a cfg with more nodes than devices still works
+    (several graph nodes share a device row)."""
+    devs = prod_mesh.devices
+    model = devs.shape[-1]
+    n_nodes = cfg.n_nodes
+    if devs.ndim == 3 and cfg.pod_axis_to == "node":
+        n_nodes *= devs.shape[0]
+    data_total = devs.size // model
+    node_ax = math.gcd(max(int(n_nodes), 1), data_total)
+    fsdp = data_total // node_ax
+    return Mesh(devs.reshape(node_ax, fsdp, model), ("node", "fsdp", "model"))
+
+
+def serve_mesh(prod_mesh) -> Mesh:
+    """(data, model) serve view; a pod axis folds into data."""
+    devs = prod_mesh.devices
+    model = devs.shape[-1]
+    return Mesh(devs.reshape(devs.size // model, model), ("data", "model"))
+
+
+# ------------------------------------------------------------------ spec rules
+
+def _fits(dim: int, size: int) -> bool:
+    return size > 1 and dim % size == 0
+
+
+def _path_keys(path) -> tuple:
+    out = []
+    for e in path:
+        k = getattr(e, "key", None)
+        if k is None:
+            k = getattr(e, "name", getattr(e, "idx", None))
+        out.append(k)
+    return tuple(out)
+
+
+def _leaf_param_spec(path_keys, shape, fsdp: int, model: int) -> P:
+    ndim = len(shape)
+    if ndim == 0:
+        return P()
+    spec = [None] * ndim
+    # expert parallelism: stacked (L, E, ...) expert tensors shard E on model
+    mdim = None
+    if "moe" in path_keys and ndim >= 3 and _fits(shape[1], model):
+        mdim = 1
+    else:
+        for d in range(ndim - 1, -1, -1):   # tensor parallel: rightmost fit
+            if _fits(shape[d], model):
+                mdim = d
+                break
+    if mdim is not None:
+        spec[mdim] = "model"
+    fcands = [d for d in range(ndim) if d != mdim and _fits(shape[d], fsdp)]
+    if fcands:
+        spec[max(fcands, key=lambda d: shape[d])] = "fsdp"
+    return P(*spec)
+
+
+def param_specs(pshape: Any, mesh, *, node_dim: bool = False) -> Any:
+    """PartitionSpec per parameter leaf. ``node_dim=False`` (the default)
+    computes within-node specs on the un-stacked tree; ``node_dim=True``
+    prepends the ``node`` axis for the node-stacked train state."""
+    sizes = dict(mesh.shape)
+    fsdp = sizes.get("fsdp", 1)
+    model = sizes.get("model", 1)
+
+    def spec_of(path, leaf):
+        s = _leaf_param_spec(_path_keys(path), leaf.shape, fsdp, model)
+        return P("node", *s) if node_dim else s
+
+    return jax.tree_util.tree_map_with_path(spec_of, pshape)
+
+
+def cache_specs(cshape: Any, mesh, *, cache_mode: str = "auto") -> Any:
+    """Decode-cache specs over the serve mesh. Cache leaves are
+    ``(L, B, ...)``: batch shards over ``data``; ``model`` goes to an inner
+    dim (heads / head_dim / latent — ``cache_mode="inner"``), or to the
+    sequence dim (``"seq"``); ``"auto"`` prefers inner, falls back to seq.
+    Integer leaves (position ring buffers) are replicated."""
+    if cache_mode not in ("auto", "inner", "seq"):
+        raise ValueError(f"unknown cache_mode {cache_mode!r}")
+    sizes = dict(mesh.shape)
+    data = sizes.get("data", 1)
+    model = sizes.get("model", 1)
+
+    def spec_of(leaf):
+        ndim = len(leaf.shape)
+        spec = [None] * ndim
+        if jax.numpy.issubdtype(leaf.dtype, jax.numpy.integer) or ndim < 3:
+            return P(*spec)
+        if _fits(leaf.shape[1], data):
+            spec[1] = "data"
+        inner = next((d for d in range(3, ndim) if _fits(leaf.shape[d], model)),
+                     None)
+        if cache_mode in ("auto", "inner") and inner is not None:
+            spec[inner] = "model"
+        elif cache_mode in ("auto", "seq") and _fits(leaf.shape[2], model):
+            spec[2] = "model"
+        return P(*spec)
+
+    return jax.tree.map(spec_of, cshape)
+
+
+def train_batch_specs(bshape: Any, mesh) -> Any:
+    """Global train batches are node-stacked ``(n_nodes, per_node, ...)``:
+    node axis over ``node``, per-node batch over ``fsdp`` when divisible
+    (kept unsharded otherwise — heterogeneous pipelines may hand out ragged
+    per-node batches)."""
+    fsdp = dict(mesh.shape).get("fsdp", 1)
+
+    def spec_of(leaf):
+        per = leaf.shape[1] if len(leaf.shape) > 1 else 0
+        f = "fsdp" if per and per % fsdp == 0 else None
+        return P("node", f, *([None] * (len(leaf.shape) - 2)))
+
+    return jax.tree.map(spec_of, bshape)

@@ -1,0 +1,275 @@
+"""Distributed SPARQ-SGD: Algorithm 1 per-tensor over the model pytree, SPMD
+over the (node, fsdp, model) logical mesh.
+
+This is the scaled realization of the engine contract whose ground truth is
+core/sparq.py's dense (n, d) reference: every leaf of the parameter tree
+carries a leading node axis, and the trigger / compression / consensus-mixing /
+bit-accounting primitives are imported from core (``trigger_mask``,
+``compress_tree``, ``gossip_mix``, ``sync_message_bits``) so the two engines
+cannot drift — tests/test_dist_equivalence.py pins them equal leaf-for-leaf.
+
+Per sync index (every H steps):
+
+    x^{t+1/2} = x^t - eta_t (m^t or g^t)                       (local SGD)
+    trig_i    = [ sum_leaves ||x_i^{t+1/2} - x_hat_i||^2 > c_t eta_t^2 ]
+    q_i       = trig_i * C(x_i^{t+1/2} - x_hat_i)              (per tensor)
+    x_hat'    = x_hat + q                                      (line 13)
+    x^{t+1}   = x^{t+1/2} + gamma (W x_hat' - x_hat')          (line 15)
+
+Communication variants over the ring graph W = ring(n):
+
+* ``dense`` — mixing materialized as a tensordot over the node axis
+  (all-gather along ``node``; exact W X for any W).
+* ``ring``  — neighbor exchange only: w (roll_{+1} x + roll_{-1} x - 2 x),
+  which XLA lowers to collective-permutes along ``node``. Identical algebra
+  for uniform ring mixing when n > 2 (n <= 2 falls back to dense).
+
+Compression is the paper's headline SignTopK at a per-tensor top-``frac``
+(core.compression.TopFrac); ``use_kernel=True`` swaps in the fused Pallas
+blockwise kernel (kernels/sign_topk.py) with per-1024-block selection.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bits as bits_mod
+from repro.core.compression import TopFrac, compress_tree, tree_payload_bits
+from repro.core.schedule import LRSchedule, decaying
+from repro.core.sparq import gossip_mix, sync_message_bits, trigger_mask
+from repro.core.topology import make_topology
+from repro.core.triggers import ThresholdSchedule, zero
+from repro.kernels.sign_topk import BLOCK, BLOCK_ROWS, sign_topk_blocks
+from repro.models.transformer import init_params, lm_loss
+
+State = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class DistSparqConfig:
+    """Runtime knobs of the distributed engine (model knobs live on ModelConfig)."""
+
+    H: int = 1                       # gap(I_T): sync every H steps
+    variant: str = "dense"           # dense | ring (mixing implementation)
+    frac: float = 1.0                # per-tensor SignTopK fraction (Section 5.2)
+    use_kernel: bool = False         # Pallas fused blockwise compression
+    threshold: ThresholdSchedule = zero()
+    lr: LRSchedule = decaying(0.5, 10.0)
+    momentum: float = 0.0            # Section 5.2 / SQuARM-style momentum
+    gamma: Optional[float] = None    # None -> gamma* from Lemma 6
+    microbatches: int = 1            # grad accumulation within a node
+    xhat_dtype: str = "float32"      # public-estimate storage dtype
+
+    def resolved_gamma(self, topo) -> float:
+        if self.gamma is not None:
+            return float(self.gamma)
+        # TopFrac keeps a `frac` mass of every tensor: use it as the omega
+        # proxy (the conservative per-coordinate bound 1/d over-damps gamma*)
+        return float(topo.gamma_star(max(min(self.frac, 1.0), 1e-3)))
+
+
+def _node_sq_dist(x_half, x_hat):
+    """Per-node squared distance summed over every leaf -> (n,) f32."""
+    parts = [jnp.sum((a.astype(jnp.float32) - b.astype(jnp.float32)) ** 2,
+                     axis=tuple(range(1, a.ndim)))
+             for a, b in zip(jax.tree.leaves(x_half), jax.tree.leaves(x_hat))]
+    return sum(parts)
+
+
+def _kernel_compress(x_half_leaf, x_hat_leaf, k_b: int, interpret: bool):
+    """Fused blockwise SignTopK of (x_half - x_hat) for one node-stacked leaf.
+
+    Folds (n, *shape) into rows of 1024-element blocks, padded so the kernel's
+    BLOCK_ROWS grid divides evenly; all-zero pad blocks compress to q = 0.
+    Trigger gating happens outside (q is linear in the 0/1 gate)."""
+    n = x_half_leaf.shape[0]
+    flat_h = x_half_leaf.reshape(n, -1).astype(jnp.float32)
+    flat_e = x_hat_leaf.reshape(n, -1).astype(jnp.float32)
+    d = flat_h.shape[1]
+    nb = -(-d // BLOCK)
+    if (n * nb) % BLOCK_ROWS:
+        nb = -(-nb // BLOCK_ROWS) * BLOCK_ROWS
+    pad = nb * BLOCK - d
+    xh = jnp.pad(flat_h, ((0, 0), (0, pad))).reshape(n * nb, BLOCK)
+    xe = jnp.pad(flat_e, ((0, 0), (0, pad))).reshape(n * nb, BLOCK)
+    q, _, _ = sign_topk_blocks(xh, xe, jnp.float32(1.0), k_b,
+                               interpret=interpret)
+    return q.reshape(n, nb * BLOCK)[:, :d].reshape(x_half_leaf.shape)
+
+
+def build_sparq(cfg, mesh, dcfg: DistSparqConfig
+                ) -> Tuple[Callable, Callable, State, Any]:
+    """Build the distributed engine for one model/mesh/runtime combination.
+
+    Returns ``(init_fn, train_step, state_specs, pshape)``:
+
+    * ``init_fn(key) -> state`` — node-stacked train state (identical x^0 on
+      every node, x_hat = 0, per paper initialization);
+    * ``train_step(state, batch) -> (state, metrics)`` — one Algorithm 1 step;
+      ``batch`` leaves are ``(n, per_node, ...)`` where ``n`` is the ensemble
+      size — ``cfg.n_nodes`` stretched to the smallest common multiple of the
+      mesh node axis (== ``cfg.n_nodes`` whenever the node axis divides it;
+      exposed as ``init_fn.n_nodes`` / ``train_step.n_nodes``);
+    * ``state_specs`` — PartitionSpec tree mirroring ``state`` (pair it with
+      ``sharding.train_batch_specs`` for the batch);
+    * ``pshape`` — un-stacked single-node parameter ShapeDtypeStruct tree.
+    """
+    from repro.dist import sharding as sh
+
+    node_ax = dict(mesh.shape).get("node", 1)
+    # ensemble size: cfg.n_nodes stretched to stay divisible by the mesh node
+    # axis (pod-folded meshes can carry more rows than cfg.n_nodes)
+    n = cfg.n_nodes * node_ax // math.gcd(cfg.n_nodes, node_ax)
+    topo = make_topology("ring", n)
+    W = jnp.asarray(topo.w, jnp.float32)
+    w_off = float(topo.w[0, 1]) if n > 2 else 0.0
+    deg = jnp.asarray((topo.w > 0).sum(1) - (topo.w.diagonal() > 0),
+                      jnp.float32)
+    gamma = dcfg.resolved_gamma(topo)
+    comp = TopFrac(frac=dcfg.frac)
+    H = int(dcfg.H)
+    mbs = int(dcfg.microbatches)
+    xhat_dt = jnp.dtype(dcfg.xhat_dtype)
+    interpret = jax.default_backend() != "tpu"
+    k_b = max(1, min(BLOCK, int(math.ceil(dcfg.frac * BLOCK))))
+    if dcfg.variant not in ("dense", "ring"):
+        raise ValueError(f"unknown variant {dcfg.variant!r}")
+    use_ring = dcfg.variant == "ring" and n > 2
+
+    pshape = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    if dcfg.use_kernel:
+        # the Pallas path is a BLOCKWISE operator: k_b entries (plus ties) and
+        # one scale per 1024-element block — charge what it actually sends
+        payload = float(sum(
+            -(-math.prod(leaf.shape) // BLOCK)
+            * bits_mod.signtopk_bits(BLOCK, k_b)
+            for leaf in jax.tree.leaves(pshape)))
+    else:
+        payload = tree_payload_bits(comp, pshape)
+    pspec = sh.param_specs(pshape, mesh, node_dim=True)
+    scalar = jax.sharding.PartitionSpec()
+    state_specs: State = {
+        "params": pspec, "x_hat": pspec, "mom": pspec,
+        "t": scalar, "bits": scalar, "bits_c": scalar,
+        "sync_rounds": scalar, "triggers": scalar,
+    }
+
+    def init_fn(key) -> State:
+        p0 = init_params(cfg, key)
+        params = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), p0)
+        bits0, bits_c0 = bits_mod.acc_init()
+        return {
+            "params": params,
+            "x_hat": jax.tree.map(lambda x: jnp.zeros(x.shape, xhat_dt), params),
+            "mom": jax.tree.map(jnp.zeros_like, params),
+            "t": jnp.int32(0), "bits": bits0, "bits_c": bits_c0,
+            "sync_rounds": jnp.int32(0), "triggers": jnp.int32(0),
+        }
+
+    def loss_fn(p, b):
+        return lm_loss(cfg, p, b)[0]
+
+    def node_losses_grads(params, batch):
+        vg = jax.vmap(jax.value_and_grad(loss_fn))
+        if mbs == 1:
+            return vg(params, batch)
+
+        def split(x):
+            nn, per = x.shape[:2]
+            return jnp.moveaxis(
+                x.reshape((nn, mbs, per // mbs) + x.shape[2:]), 1, 0)
+
+        def body(carry, bmb):
+            l_acc, g_acc = carry
+            li, gi = vg(params, bmb)
+            return (l_acc + li, jax.tree.map(jnp.add, g_acc, gi)), None
+
+        zeros = (jnp.zeros((n,), jnp.float32),
+                 jax.tree.map(lambda x: jnp.zeros_like(x), params))
+        (l_tot, g_tot), _ = jax.lax.scan(body, zeros,
+                                         jax.tree.map(split, batch))
+        return l_tot / mbs, jax.tree.map(lambda g: g / mbs, g_tot)
+
+    def mix_term(xh_leaf):
+        """Consensus term (W x_hat - x_hat) over the leading node axis."""
+        x = xh_leaf.astype(jnp.float32)
+        if use_ring:
+            up = jnp.roll(x, 1, axis=0)
+            down = jnp.roll(x, -1, axis=0)
+            return w_off * (up + down - 2.0 * x)
+        return gossip_mix(W, x)
+
+    def train_step(state: State, batch) -> Tuple[State, Dict[str, jax.Array]]:
+        lead = {leaf.shape[0] for leaf in jax.tree.leaves(batch)}
+        if lead != {n}:
+            raise ValueError(
+                f"batch leading dims {sorted(lead)} != ensemble size {n} "
+                f"(cfg.n_nodes={cfg.n_nodes} stretched over a node axis of "
+                f"{node_ax}; see build_sparq.__doc__)")
+        losses, grads = node_losses_grads(state["params"], batch)
+        loss = jnp.mean(losses)
+        eta = dcfg.lr(state["t"]).astype(jnp.float32)
+        if dcfg.momentum > 0.0:
+            mom = jax.tree.map(lambda m, g: dcfg.momentum * m + g,
+                               state["mom"], grads)
+            upd = mom
+        else:
+            mom, upd = state["mom"], grads
+        x_half = jax.tree.map(lambda p, u: p - eta * u.astype(p.dtype),
+                              state["params"], upd)
+
+        def sync_branch(op):
+            xh, xe = op
+            c_t = dcfg.threshold(state["t"])
+            trig = trigger_mask(_node_sq_dist(xh, xe), c_t, eta)     # (n,)
+            trigf = trig.astype(jnp.float32)
+
+            if dcfg.use_kernel:
+                q = jax.tree.map(
+                    lambda a, b: _kernel_compress(a, b, k_b, interpret), xh, xe)
+            else:
+                diff = jax.tree.map(
+                    lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                    xh, xe)
+                q = jax.vmap(lambda tr: compress_tree(comp, tr))(diff)
+            gate = lambda ql: ql * trigf.reshape((n,) + (1,) * (ql.ndim - 1))
+            q = jax.tree.map(gate, q)                                # line 11
+            xe_new = jax.tree.map(
+                lambda e, ql: (e.astype(jnp.float32) + ql).astype(xhat_dt),
+                xe, q)                                               # line 13
+            x_new = jax.tree.map(
+                lambda h, e: (h.astype(jnp.float32)
+                              + gamma * mix_term(e)).astype(h.dtype),
+                xh, xe_new)                                          # line 15
+            new_bits, new_c = bits_mod.acc_add(
+                state["bits"], state["bits_c"],
+                sync_message_bits(trig, deg, payload))
+            return (x_new, xe_new, new_bits, new_c,
+                    state["sync_rounds"] + 1,
+                    state["triggers"] + jnp.sum(trig).astype(jnp.int32))
+
+        def local_branch(op):
+            xh, xe = op
+            return (xh, xe, state["bits"], state["bits_c"],
+                    state["sync_rounds"], state["triggers"])
+
+        do_sync = ((state["t"] + 1) % H) == 0
+        x_new, xe_new, bits, bits_c, rounds, trigs = jax.lax.cond(
+            do_sync, sync_branch, local_branch, (x_half, state["x_hat"]))
+        new_state = {"params": x_new, "x_hat": xe_new, "mom": mom,
+                     "t": state["t"] + 1, "bits": bits, "bits_c": bits_c,
+                     "sync_rounds": rounds, "triggers": trigs}
+        metrics = {"loss": loss, "eta": eta,
+                   "bits": bits.astype(jnp.float32),
+                   "sync_rounds": rounds.astype(jnp.float32),
+                   "triggers": trigs.astype(jnp.float32)}
+        return new_state, metrics
+
+    init_fn.n_nodes = train_step.n_nodes = n
+    return init_fn, train_step, state_specs, pshape

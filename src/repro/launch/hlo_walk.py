@@ -115,10 +115,11 @@ def parse_module(hlo: str) -> Tuple[Dict[str, Comp], Optional[str]]:
     # ---------- pass 1: symbol tables, parameter maps, slice-only charges
     syms: Dict[str, Dict[str, str]] = {}
     param_ids: Dict[str, Dict[str, int]] = {}
-    # per computation: parameter index -> bytes actually read when the
-    # parameter is consumed ONLY via dynamic-slice/gather (a scanned layer
-    # stack reads one layer slice per trip, not the whole stack)
-    param_charges: Dict[str, Dict[int, float]] = {}
+    # per computation: parameter name -> list of uses, each
+    #   ("slice", bytes)      consumed by dynamic-slice/gather
+    #   ("call", callee, j)   passed as operand j of a fusion/call
+    #   ("other",)            anything else (charged in full)
+    uses: Dict[str, Dict[str, List[tuple]]] = {}
     for name, lines in bodies.items():
         sym: Dict[str, str] = {}
         pidx: Dict[str, int] = {}
@@ -132,8 +133,7 @@ def parse_module(hlo: str) -> Tuple[Dict[str, Comp], Optional[str]]:
                 pidx[dm.group(1)] = int(pm.group(1))
         syms[name] = sym
         param_ids[name] = pidx
-        sliced_reads: Dict[str, float] = {}
-        other_use: Dict[str, bool] = {}
+        use: Dict[str, List[tuple]] = {}
         for s in lines:
             dm = _DEF_RE.match(s)
             if not dm:
@@ -144,20 +144,59 @@ def parse_module(hlo: str) -> Tuple[Dict[str, Comp], Optional[str]]:
             am = (re.search(r"\b" + re.escape(op0) + r"\(([^)]*)\)", rhs)
                   if op0 else None)
             refs = _OPERANDS_RE.findall(am.group(1)) if am else []
+            # fusion ops name their body via calls=; call ops via to_apply=
+            cm_calls = re.search(r"(?:calls|to_apply)=%?([\w\.\-]+)", s)
             if op0 in ("dynamic-slice", "gather") and refs:
                 src = refs[0]
                 if src in pidx:
-                    sliced_reads[src] = sliced_reads.get(src, 0.0) + \
-                        _result_bytes(result_type(rhs))
+                    use.setdefault(src, []).append(
+                        ("slice", _result_bytes(result_type(rhs))))
                     refs = refs[1:]
+            elif op0 in ("fusion", "call") and cm_calls:
+                # operands map positionally onto the callee's parameters —
+                # defer to the callee's charge for that parameter
+                for j, rref in enumerate(refs):
+                    if rref in pidx:
+                        use.setdefault(rref, []).append(
+                            ("call", cm_calls.group(1), j))
+                refs = []
             for rref in refs:
                 if rref in pidx:
-                    other_use[rref] = True
-        charges: Dict[int, float] = {}
-        for pname, pi in pidx.items():
-            if pname in sliced_reads and not other_use.get(pname):
-                charges[pi] = sliced_reads[pname]
-        param_charges[name] = charges
+                    use.setdefault(rref, []).append(("other",))
+        uses[name] = use
+
+    # per computation: parameter index -> bytes actually read when the
+    # parameter is consumed ONLY via dynamic-slice/gather, possibly behind
+    # fusion/call indirections (a scanned layer stack reads one layer slice
+    # per trip, not the whole stack). Fixpoint over call edges.
+    param_charges: Dict[str, Dict[int, float]] = {n: {} for n in bodies}
+    for _ in range(max(len(bodies), 1)):
+        changed = False
+        for name in bodies:
+            for pname, pi in param_ids[name].items():
+                if pi in param_charges[name]:
+                    continue
+                ulist = uses[name].get(pname)
+                if not ulist:
+                    continue  # unused param: keep the conservative full charge
+                total, resolved = 0.0, True
+                for u in ulist:
+                    if u[0] == "slice":
+                        total += u[1]
+                    elif u[0] == "call":
+                        c = param_charges.get(u[1], {}).get(u[2])
+                        if c is None:
+                            resolved = False
+                            break
+                        total += c
+                    else:
+                        resolved = False
+                        break
+                if resolved:
+                    param_charges[name][pi] = total
+                    changed = True
+        if not changed:
+            break
 
     # ---------- pass 2: per-computation flops / bytes / collectives / calls
     for name, lines in bodies.items():
@@ -193,6 +232,10 @@ def parse_module(hlo: str) -> Tuple[Dict[str, Comp], Optional[str]]:
             cm_calls = re.search(r"calls=%?([\w\.\-]+)", s)
             if cm_calls:
                 callee = cm_calls.group(1)
+            elif op == "call":
+                cm_apply = re.search(r"to_apply=%?([\w\.\-]+)", s)
+                if cm_apply:
+                    callee = cm_apply.group(1)
             # ---- HBM traffic (instructions inside fusions stay in VMEM;
             # the fusion call site carries the bytes)
             if not fusion_internal and op and op not in _FREE_OPS:

@@ -1,0 +1,55 @@
+"""Compressor-registry contract: construction round-trips every name, unknown
+names are rejected, and TopFrac's k / bits stay consistent at edge dims.
+(Pure pytest — the distribution-level properties live in
+test_compression_properties.py behind hypothesis.)"""
+import math
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import bits as bits_mod
+from repro.core.compression import (_REGISTRY, SignTopK, TopFrac, TopK,
+                                    make_compressor)
+
+
+@pytest.mark.parametrize("name", sorted(_REGISTRY))
+def test_registry_round_trip(name):
+    comp = make_compressor(name)
+    assert isinstance(comp, _REGISTRY[name])
+    assert comp.name == name
+    x = jnp.linspace(-1.0, 1.0, 16)
+    y = comp(x, jax.random.PRNGKey(0))
+    assert y.shape == x.shape
+    assert comp.bits(16) > 0
+    assert 0.0 < comp.omega(16) <= 1.0
+
+
+def test_registry_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown compressor"):
+        make_compressor("nope")
+
+
+@pytest.mark.parametrize("frac", [0.01, 0.1, 0.5, 1.0])
+@pytest.mark.parametrize("d", [1, 2, 5, 1000])
+def test_topfrac_k_and_bits_consistent(d, frac):
+    c = TopFrac(frac=frac)
+    k = c._k(d)
+    assert k == max(1, math.ceil(frac * d))
+    assert 1 <= k <= d
+    assert c.bits(d) == bits_mod.signtopk_bits(d, k)
+    # support size == k on distinct-magnitude inputs
+    x = jnp.linspace(1.0, 2.0, d)
+    assert int(jnp.sum(c(x) != 0)) == k
+
+
+@pytest.mark.parametrize("cls", [TopK, SignTopK])
+def test_topk_k_exceeds_d(cls):
+    c = cls(k=10)
+    x = jnp.array([1.0, -2.0, 3.0])
+    y = c(x)
+    assert y.shape == (3,)
+    # k clips to d in both the operator and its bit accounting
+    assert int(jnp.sum(y != 0)) == 3
+    assert c.bits(3) == c.bits(3)  # deterministic
+    assert c.bits(3) <= c.bits(30)

@@ -8,9 +8,16 @@ from repro.configs.registry import get_config
 from repro.dist import sharding as sh
 from repro.models.transformer import init_cache, init_params
 
-MESH = AbstractMesh((16, 16, 2), ("node", "fsdp", "model"))
+def _amesh(sizes, names):
+    try:
+        return AbstractMesh(sizes, names)             # jax >= 0.5 API
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))  # jax 0.4.x API
+
+
+MESH = _amesh((16, 16, 2), ("node", "fsdp", "model"))
 # serve-view abstract mesh
-SMESH = AbstractMesh((16, 16), ("data", "model"))
+SMESH = _amesh((16, 16), ("data", "model"))
 
 
 def _pshape(arch):
@@ -42,7 +49,7 @@ def test_every_leaf_gets_a_divisible_spec(arch):
 
 def test_embedding_vocab_not_divisible_is_replicated():
     cfg, pshape = _pshape("mamba2-370m")  # vocab 50280 % 16 != 0
-    mesh = AbstractMesh((4, 1, 16), ("node", "fsdp", "model"))
+    mesh = _amesh((4, 1, 16), ("node", "fsdp", "model"))
     specs = sh.param_specs(pshape, mesh, node_dim=False)
     emb_spec = specs["embed"]["embedding"]
     assert emb_spec[0] is None  # vocab dim replicated over 'model'

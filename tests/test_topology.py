@@ -2,6 +2,7 @@
 graphs, Lemma 6 constants in range."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.topology import Topology, make_topology
