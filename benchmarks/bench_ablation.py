@@ -3,15 +3,15 @@ steps H and the event trigger should strictly reduce bits at equal loss; the
 threshold schedule trades triggers for consensus error."""
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine
 from repro.core.compression import SignTopK
 from repro.core.schedule import decaying
-from repro.core.sparq import SparqConfig, run_scan
+from repro.core.sparq import SparqConfig, init_state, make_step
 from repro.core.topology import make_topology
 from repro.core.triggers import constant, zero
 from repro.data.synthetic import convex_dataset, logistic_loss_and_grad
@@ -20,6 +20,7 @@ from repro.data.synthetic import convex_dataset, logistic_loss_and_grad
 def run_bench(quick: bool = True) -> List[Dict]:
     n, m, f, c = (8, 80, 32, 10) if quick else (20, 200, 128, 10)
     T = 300 if quick else 2000
+    rec = max(T // 6, 1)
     X, Y = convex_dataset(n, m, n_features=f, n_classes=c, seed=3)
     Xj, Yj = jnp.asarray(X), jnp.asarray(Y)
     _, make_grad_fn, full_loss = logistic_loss_and_grad(c)
@@ -28,6 +29,9 @@ def run_bench(quick: bool = True) -> List[Dict]:
     lr = decaying(1.0, 100.0)
     x0 = jnp.zeros(f * c)
     key = jax.random.PRNGKey(0)
+
+    def eval_fn(xbar):
+        return full_loss(xbar, Xj, Yj)
 
     rows = []
     for name, H, k, c0 in [
@@ -41,15 +45,19 @@ def run_bench(quick: bool = True) -> List[Dict]:
         cfg = SparqConfig(topology=topo, compressor=SignTopK(k=k),
                           threshold=constant(c0) if c0 else zero(),
                           lr=lr, H=H)
-        t0 = time.perf_counter()
-        st = run_scan(cfg, grad_fn, x0, T, key)
-        dt = (time.perf_counter() - t0) / T * 1e6
-        xbar = jnp.mean(st.x, 0)
-        rows.append({"name": f"ablate_{name}", "us_per_call": round(dt, 1),
-                     "final_loss": round(float(full_loss(xbar, Xj, Yj)), 4),
+        runner = engine.make_runner(make_step(cfg, grad_fn), T,
+                                    record_every=rec, eval_fn=eval_fn)
+        st, trace, us = engine.timed_run(
+            runner, lambda: init_state(x0, n), key, T)
+        # evaluate on the true step-T iterate (the last trace record sits at
+        # (T//rec)*rec, which is < T when rec does not divide T)
+        final_loss = float(eval_fn(jnp.mean(st.x, 0)))
+        rows.append({"name": f"ablate_{name}", "us_per_call": round(us, 1),
+                     "final_loss": round(final_loss, 4),
                      "bits": float(st.bits),
                      "rounds": int(st.sync_rounds),
-                     "trigger_events": int(st.triggers)})
+                     "trigger_events": int(st.triggers),
+                     "trace": trace.to_dict()})
     return rows
 
 

@@ -6,22 +6,23 @@ and the bits-savings factor to reach a target loss.
 Paper setting (Section 5.1): n=60 ring, d=7840 (784x10), SignTopK k=10,
 eta_t = 1/(t+100), H=5, trigger c0=5000 then increased periodically.
 `quick` shrinks n/d/T for the CI harness; `full` reproduces the shape of the
-paper run.
+paper run. Each method runs as ONE chunked-scan XLA program (core/engine.py)
+and is timed after a warm-up run, so `us_per_call` is steady-state step time
+(jit compile excluded).
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import baselines
+from repro.core import baselines, engine
 from repro.core.compression import Sign, SignTopK, TopK
 from repro.core.schedule import decaying
-from repro.core.sparq import SparqConfig, run
+from repro.core.sparq import SparqConfig, init_state, make_step
 from repro.core.topology import make_topology
-from repro.core.triggers import constant, piecewise, zero
+from repro.core.triggers import piecewise, zero
 from repro.data.synthetic import convex_dataset, logistic_loss_and_grad
 
 
@@ -48,13 +49,13 @@ def run_bench(quick: bool = True) -> List[Dict]:
     results = []
 
     def record(name, cfg):
-        t0 = time.perf_counter()
-        st, trace = run(cfg, grad_fn, x0, T, key, record_every=rec,
-                        eval_fn=eval_fn)
-        dt = (time.perf_counter() - t0) / T * 1e6
+        runner = engine.make_runner(make_step(cfg, grad_fn), T,
+                                    record_every=rec, eval_fn=eval_fn)
+        st, trace, us = engine.timed_run(
+            runner, lambda: init_state(x0, n), key, T)
         final = trace[-1]
         results.append({
-            "name": name, "us_per_call": round(dt, 1),
+            "name": name, "us_per_call": round(us, 1),
             "final_loss": round(final[2], 4), "bits": final[1],
             "rounds": int(st.sync_rounds), "trigger_events": int(st.triggers),
             "trace": trace,
@@ -77,14 +78,12 @@ def run_bench(quick: bool = True) -> List[Dict]:
     record("choco_topk", baselines.choco_config(topo, TopK(k=k), lr))
     record("choco_signtopk", baselines.choco_config(topo, SignTopK(k=k), lr))
     # vanilla decentralized SGD (32-bit exact gossip)
-    t0 = time.perf_counter()
-    vstep = baselines.make_vanilla_step(topo, lr, grad_fn)
-    vstate = baselines.init_vanilla(x0, n)
-    vstate, vtrace = baselines.run_generic(vstep, vstate, T, key,
-                                           record_every=rec, eval_fn=eval_fn)
-    dt = (time.perf_counter() - t0) / T * 1e6
+    vrunner = engine.make_runner(baselines.make_vanilla_step(topo, lr, grad_fn),
+                                 T, record_every=rec, eval_fn=eval_fn)
+    vstate, vtrace, vus = engine.timed_run(
+        vrunner, lambda: baselines.init_vanilla(x0, n), key, T)
     results.append({"name": "vanilla_decentralized",
-                    "us_per_call": round(dt, 1),
+                    "us_per_call": round(vus, 1),
                     "final_loss": round(vtrace[-1][2], 4),
                     "bits": vtrace[-1][1], "rounds": T,
                     "trigger_events": T * n, "trace": vtrace})
@@ -104,7 +103,7 @@ def run_bench(quick: bool = True) -> List[Dict]:
         b = bits_to_target(r["trace"])
         r["bits_to_target"] = b
         r["savings_vs_sparq"] = round(b / sparq_bits, 1) if sparq_bits else None
-        del r["trace"]
+        r["trace"] = r["trace"].to_dict()
     return results
 
 

@@ -15,7 +15,7 @@ from repro.kernels.sign_topk import BLOCK, sign_topk_blocks
 
 
 def _time(fn, *args, reps=20):
-    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))  # compile + warm, fully retired
     t0 = time.perf_counter()
     for _ in range(reps):
         out = fn(*args)

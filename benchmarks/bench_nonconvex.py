@@ -10,17 +10,16 @@ path mirrors.
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
-from repro.core import baselines
+from repro.core import baselines, engine
 from repro.core.compression import Sign, TopFrac
 from repro.core.schedule import warmup_piecewise
-from repro.core.sparq import SparqConfig, run
+from repro.core.sparq import SparqConfig, init_state, make_step
 from repro.core.topology import make_topology
 from repro.core.triggers import piecewise, zero
 from repro.configs.registry import get_config
@@ -64,15 +63,15 @@ def run_bench(quick: bool = True) -> List[Dict]:
     results = []
 
     def record(name, cfg_s):
-        t0 = time.perf_counter()
-        st, trace = run(cfg_s, grad_fn, flat0, T, key, record_every=rec,
-                        eval_fn=eval_fn)
-        dt = (time.perf_counter() - t0) / T * 1e6
+        runner = engine.make_runner(make_step(cfg_s, grad_fn), T,
+                                    record_every=rec, eval_fn=eval_fn)
+        st, trace, us = engine.timed_run(
+            runner, lambda: init_state(flat0, n), key, T)
         results.append({
-            "name": name, "us_per_call": round(dt, 1),
+            "name": name, "us_per_call": round(us, 1),
             "final_loss": round(trace[-1][2], 4), "bits": trace[-1][1],
             "trigger_events": int(st.triggers),
-            "sync_rounds": int(st.sync_rounds)})
+            "sync_rounds": int(st.sync_rounds), "trace": trace})
 
     thr = piecewise(2.0, 1.0, every=max(T // 6, 1), until=T)
     record("sparq_signtop10_mom", SparqConfig(
@@ -89,20 +88,20 @@ def run_bench(quick: bool = True) -> List[Dict]:
         lr=lr, H=1, momentum=0.9))
 
     # vanilla decentralized SGD
-    t0 = time.perf_counter()
     vstep = baselines.make_vanilla_step(topo, lr, grad_fn, momentum=0.9)
-    vstate = baselines.init_vanilla(flat0, n)
-    vstate, vtrace = baselines.run_generic(vstep, vstate, T, key,
-                                           record_every=rec, eval_fn=eval_fn)
-    dt = (time.perf_counter() - t0) / T * 1e6
+    vrunner = engine.make_runner(vstep, T, record_every=rec, eval_fn=eval_fn)
+    vstate, vtrace, vus = engine.timed_run(
+        vrunner, lambda: baselines.init_vanilla(flat0, n), key, T)
     results.append({"name": "vanilla_decentralized",
-                    "us_per_call": round(dt, 1),
+                    "us_per_call": round(vus, 1),
                     "final_loss": round(vtrace[-1][2], 4),
                     "bits": vtrace[-1][1],
-                    "trigger_events": T * n, "sync_rounds": T})
+                    "trigger_events": T * n, "sync_rounds": T,
+                    "trace": vtrace})
     sparq_bits = results[0]["bits"]
     for r in results:
         r["bits_ratio_vs_sparq"] = round(r["bits"] / sparq_bits, 1)
+        r["trace"] = r["trace"].to_dict()
     return results
 
 

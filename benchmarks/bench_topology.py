@@ -6,15 +6,15 @@ delta, gamma*, consensus error after T steps, bits, and final loss for
 SPARQ-SGD on each topology."""
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine
 from repro.core.compression import SignTopK
 from repro.core.schedule import decaying
-from repro.core.sparq import SparqConfig, run_scan
+from repro.core.sparq import SparqConfig, init_state, make_step
 from repro.core.topology import make_topology
 from repro.core.triggers import zero
 from repro.data.synthetic import convex_dataset, logistic_loss_and_grad
@@ -23,6 +23,7 @@ from repro.data.synthetic import convex_dataset, logistic_loss_and_grad
 def run_bench(quick: bool = True) -> List[Dict]:
     n = 16
     T = 300 if quick else 2000
+    rec = max(T // 6, 1)
     f, c = (32, 10) if quick else (128, 10)
     X, Y = convex_dataset(n, 100, n_features=f, n_classes=c, seed=5)
     Xj, Yj = jnp.asarray(X), jnp.asarray(Y)
@@ -31,25 +32,33 @@ def run_bench(quick: bool = True) -> List[Dict]:
     lr = decaying(1.0, 100.0)
     x0 = jnp.zeros(f * c)
 
+    def eval_fn(xbar):
+        return full_loss(xbar, Xj, Yj)
+
     rows = []
     for kind, kw in (("ring", {}), ("torus2d", {}),
                      ("expander", {"deg": 4, "seed": 1}),
+                     ("expander_deg3", {"deg": 3, "seed": 1}),
                      ("complete", {})):
-        topo = make_topology(kind, n, **kw)
+        topo = make_topology(kind.split("_")[0], n, **kw)
         cfg = SparqConfig(topology=topo, compressor=SignTopK(k=10),
                           threshold=zero(), lr=lr, H=5)
-        t0 = time.perf_counter()
-        st = run_scan(cfg, grad_fn, x0, T, jax.random.PRNGKey(0))
-        dt = (time.perf_counter() - t0) / T * 1e6
+        runner = engine.make_runner(make_step(cfg, grad_fn), T,
+                                    record_every=rec, eval_fn=eval_fn)
+        st, trace, us = engine.timed_run(
+            runner, lambda: init_state(x0, n), jax.random.PRNGKey(0), T)
         xbar = jnp.mean(st.x, 0)
         consensus = float(jnp.linalg.norm(st.x - xbar[None]))
         rows.append({
-            "name": f"topology_{kind}", "us_per_call": round(dt, 1),
+            "name": f"topology_{kind}", "us_per_call": round(us, 1),
             "delta": round(topo.delta, 4),
             "gamma_star": round(topo.gamma_star(10 / (f * c)), 5),
-            "final_loss": round(float(full_loss(xbar, Xj, Yj)), 4),
+            # step-T iterate, consistent with consensus_err/bits (the last
+            # trace record sits at (T//rec)*rec < T when rec doesn't divide T)
+            "final_loss": round(float(eval_fn(xbar)), 4),
             "consensus_err": round(consensus, 4),
             "bits": float(st.bits),
+            "trace": trace.to_dict(),
         })
     return rows
 

@@ -3,15 +3,59 @@
   bench_convex     -> Figure 1a/1b (convex; loss vs rounds and vs bits)
   bench_nonconvex  -> Figure 1c/1d (non-convex LM; loss vs bits, momentum)
   bench_ablation   -> Remark 4 (H / omega / trigger ablations)
+  bench_topology   -> Footnote 5 (expander vs ring vs torus)
   bench_kernels    -> compression hot-spot kernels (us/call + empirical omega)
   roofline         -> §Roofline summary from dry-run artifacts
 
-Prints ``name,us_per_call,derived`` CSV. ``--full`` runs paper-scale settings.
+Prints ``name,us_per_call,derived`` CSV and writes one machine-readable
+``BENCH_<suite>.json`` artifact per suite to ``--out-dir`` (default
+``results/``) so the perf trajectory is tracked PR-over-PR — see the README
+"Benchmarks" section for the schema. ``--full`` runs paper-scale settings.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import time
+
+SCHEMA_VERSION = 1
+
+
+def _finite(obj):
+    """Map non-finite floats to strings so the artifact is STRICT json —
+    bare json.dump would emit Infinity/NaN tokens (invalid JSON) for e.g.
+    bits_to_target = inf (method never reached the target loss)."""
+    if isinstance(obj, float):
+        if obj != obj:
+            return "nan"
+        if obj in (float("inf"), float("-inf")):
+            return "inf" if obj > 0 else "-inf"
+        return obj
+    if isinstance(obj, dict):
+        return {k: _finite(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_finite(v) for v in obj]
+    return obj
+
+
+def write_artifact(out_dir: str, suite: str, quick: bool, rows,
+                   elapsed_s: float, error: str = "") -> str:
+    """BENCH_<suite>.json: schema header + the suite's rows (full traces)."""
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{suite}.json")
+    doc = {
+        "schema_version": SCHEMA_VERSION,
+        "suite": suite,
+        "quick": quick,
+        "generated_unix": round(time.time(), 1),
+        "elapsed_s": round(elapsed_s, 2),
+        "error": error,
+        "rows": _finite(rows),
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, default=str, allow_nan=False)
+    return path
 
 
 def main(argv=None) -> None:
@@ -20,6 +64,11 @@ def main(argv=None) -> None:
     ap.add_argument("--suite", default="all",
                     choices=["all", "convex", "nonconvex", "ablation",
                              "topology", "kernels", "roofline"])
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "results"))
+    ap.add_argument("--no-artifacts", action="store_true",
+                    help="CSV to stdout only; skip BENCH_*.json")
     args = ap.parse_args(argv)
     quick = not args.full
 
@@ -37,17 +86,28 @@ def main(argv=None) -> None:
         suites = {args.suite: suites[args.suite]}
 
     print("name,us_per_call,derived")
+    any_error = False
     for sname, fn in suites.items():
+        t0 = time.perf_counter()
         try:
             rows = fn(quick=quick)
+            err = ""
         except Exception as e:  # pragma: no cover - report and continue
-            print(f"{sname}_ERROR,0,\"{type(e).__name__}: {e}\"")
-            continue
+            rows, err = [], f"{type(e).__name__}: {e}"
+            any_error = True
+            print(f"{sname}_ERROR,0,\"{err}\"")
+        elapsed = time.perf_counter() - t0
+        if not args.no_artifacts:
+            write_artifact(args.out_dir, sname, quick, rows, elapsed, err)
         for r in rows:
+            r = dict(r)
             name = r.pop("name")
             us = r.pop("us_per_call", 0)
+            r.pop("trace", None)  # traces go to the JSON artifact, not the CSV
             derived = json.dumps(r, default=str).replace('"', "'")
             print(f"{name},{us},\"{derived}\"")
+    if any_error:   # every suite still ran + wrote its artifact, but a crash
+        raise SystemExit(1)  # must fail the process (the CI job relies on it)
 
 
 if __name__ == "__main__":

@@ -33,7 +33,14 @@ cfg = SparqConfig(
     gamma=0.3,                                 # consensus stepsize
 )
 x0 = jnp.zeros(N_FEATURES * N_CLASSES)
-state, _ = run(cfg, grad_fn, x0, T, jax.random.PRNGKey(0))
+# the whole T-step trajectory runs as ONE chunked-scan XLA program; the
+# loss/bits trace is recorded in-graph and synced to host once (core/engine.py)
+state, trace = run(cfg, grad_fn, x0, T, jax.random.PRNGKey(0),
+                   record_every=T // 5,
+                   eval_fn=lambda xb: full_loss(xb, Xj, Yj))
+for t, bits, loss, rounds, triggers in trace:
+    print(f"  t={t:5d} loss {loss:.4f} bits {bits:.3e} "
+          f"({triggers}/{rounds * N_NODES} node-syncs triggered)")
 xbar = jnp.mean(state.x, axis=0)
 print(f"SPARQ-SGD   : loss {float(full_loss(xbar, Xj, Yj)):.4f} "
       f"bits {float(state.bits):.3e} "

@@ -4,8 +4,9 @@ from repro.core.compression import (Compressor, Identity, QSGD, QsTopK, RandK,
                                     make_compressor)
 from repro.core.schedule import (LRSchedule, decaying, fixed, is_sync,
                                  theorem1_lr, theorem2_lr, warmup_piecewise)
+from repro.core.engine import Trace, make_runner, run_traced, timed_run
 from repro.core.sparq import (SparqConfig, SparqState, init_state, make_step,
-                              run, run_scan)
+                              run, run_loop, run_scan)
 from repro.core.topology import Topology, make_topology
 from repro.core.triggers import (ThresholdSchedule, constant, make_schedule,
                                  piecewise, poly, should_trigger, zero)
@@ -14,7 +15,8 @@ __all__ = [
     "Compressor", "Identity", "QSGD", "QsTopK", "RandK", "Sign", "SignTopK",
     "TopFrac", "TopK", "make_compressor", "LRSchedule", "decaying", "fixed",
     "is_sync", "theorem1_lr", "theorem2_lr", "warmup_piecewise", "SparqConfig",
-    "SparqState", "init_state", "make_step", "run", "run_scan", "Topology",
+    "SparqState", "init_state", "make_step", "run", "run_loop", "run_scan",
+    "Trace", "make_runner", "run_traced", "timed_run", "Topology",
     "make_topology", "ThresholdSchedule", "constant", "make_schedule",
     "piecewise", "poly", "should_trigger", "zero",
 ]

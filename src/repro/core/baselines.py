@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bits as bits_mod
+from repro.core import engine
 from repro.core.compression import Compressor
 from repro.core.schedule import LRSchedule
 from repro.core.sparq import GradFn, SparqConfig, SparqState, init_state, make_step
@@ -66,6 +67,7 @@ def make_vanilla_step(topology: Topology, lr: LRSchedule, grad_fn: GradFn,
 
 def init_vanilla(x0: jax.Array, n: int) -> VanillaState:
     x = jnp.broadcast_to(x0, (n, x0.shape[-1])) if x0.ndim == 1 else x0
+    x = jnp.array(x)  # own buffer: run_generic donates the state (engine.py)
     bits0, bits_c0 = bits_mod.acc_init()
     return VanillaState(x=x, mom=jnp.zeros_like(x), t=jnp.int32(0),
                         bits=bits0, bits_c=bits_c0)
@@ -105,12 +107,28 @@ def make_central_step(n: int, lr: LRSchedule, grad_fn: GradFn,
 
 def init_central(x0: jax.Array) -> CentralState:
     bits0, bits_c0 = bits_mod.acc_init()
-    return CentralState(x=x0, mom=jnp.zeros_like(x0), t=jnp.int32(0),
+    x = jnp.array(x0)  # own buffer: run_generic donates the state (engine.py)
+    return CentralState(x=x, mom=jnp.zeros_like(x), t=jnp.int32(0),
                         bits=bits0, bits_c=bits_c0)
 
 
 def run_generic(step, state, T: int, key: jax.Array, record_every: int = 0,
                 eval_fn=None, x_of=lambda s: s.x):
+    """Chunked-scan driver for any baseline step (core/engine.py): the whole
+    trajectory is one XLA program, traces are recorded in-graph.
+
+    ``state`` is caller-supplied, so it is NOT donated (the caller may hold
+    references to its buffers); performance-sensitive paths should use
+    ``engine.make_runner`` directly with a fresh state per call, as the bench
+    suites do."""
+    return engine.run_traced(step, state, T, key, record_every=record_every,
+                             eval_fn=eval_fn, x_of=x_of, donate=False)
+
+
+def run_generic_loop(step, state, T: int, key: jax.Array,
+                     record_every: int = 0, eval_fn=None,
+                     x_of=lambda s: s.x):
+    """Legacy per-step Python loop (ground truth for tests/test_engine.py)."""
     step = jax.jit(step)
     trace = []
     for t in range(T):

@@ -1,0 +1,190 @@
+"""Chunked-scan experiment engine.
+
+Every long-horizon experiment in this repo (the bench suites, the examples,
+the convergence tests) is "run step_fn for T steps, record (t, bits, loss,
+sync_rounds, triggers) every `record_every` steps".  The legacy drivers
+(`core/sparq.run`, `core/baselines.run_generic`) dispatched one jitted step
+per Python iteration and synced to host at every record point — thousands of
+dispatches and device->host round trips per curve, which made the paper-scale
+Figure-1 runs (n=60, T=4000) infeasible on the benchmark timeout.
+
+`run_traced` puts the whole trajectory inside ONE jitted XLA program:
+
+    outer lax.scan over R = T // record_every chunks
+      inner lax.scan over `record_every` steps      (donated carry)
+      -> record (t, bits, loss, sync_rounds, triggers) in-graph
+    trailing lax.scan over the T % record_every remainder steps
+
+The trace lives in preallocated in-graph buffers (the stacked outputs of the
+outer scan); the single host sync happens when the caller reads the returned
+``Trace``.  The PRNG key is carried through the scan and split sequentially —
+``key, sub = split(key)`` per step — which makes the engine reproduce the
+legacy Python loop's key sequence exactly (tests/test_engine.py pins the
+traces equal within float tolerance).
+
+``step_fn(state, key) -> state`` may be any pure function over a NamedTuple
+state that carries ``.t`` and ``.bits``; ``sync_rounds`` / ``triggers`` are
+recorded when present and 0 otherwise (the vanilla/centralized baselines don't
+track them).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Trace:
+    """Columnar (t, bits, loss, sync_rounds, triggers) record buffers.
+
+    Behaves like the legacy list-of-tuples trace — ``len``, indexing and
+    iteration yield ``(t, bits, loss, sync_rounds, triggers)`` python-scalar
+    tuples — while keeping the columns available as numpy arrays for the
+    BENCH_*.json artifacts.
+    """
+
+    __slots__ = ("t", "bits", "loss", "sync_rounds", "triggers")
+
+    def __init__(self, t, bits, loss, sync_rounds, triggers):
+        self.t = np.asarray(t, np.int64)
+        self.bits = np.asarray(bits, np.float64)
+        self.loss = np.asarray(loss, np.float64)
+        self.sync_rounds = np.asarray(sync_rounds, np.int64)
+        self.triggers = np.asarray(triggers, np.int64)
+
+    @classmethod
+    def empty(cls) -> "Trace":
+        z = np.zeros((0,))
+        return cls(z, z, z, z, z)
+
+    def __len__(self) -> int:
+        return int(self.t.shape[0])
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return [self[j] for j in range(*i.indices(len(self)))]
+        return (int(self.t[i]), float(self.bits[i]), float(self.loss[i]),
+                int(self.sync_rounds[i]), int(self.triggers[i]))
+
+    def __iter__(self):
+        return (self[i] for i in range(len(self)))
+
+    def to_dict(self) -> dict:
+        """JSON-able columns for the BENCH_<suite>.json artifacts."""
+        return {"t": self.t.tolist(), "bits": self.bits.tolist(),
+                "loss": self.loss.tolist(),
+                "sync_rounds": self.sync_rounds.tolist(),
+                "triggers": self.triggers.tolist()}
+
+
+def _default_x_of(state):
+    return state.x
+
+
+def _mean_model(x: jax.Array) -> jax.Array:
+    """x_bar for eval: node-mean of an (n, d) ensemble, identity for (d,)."""
+    return jnp.mean(x, axis=0) if x.ndim == 2 else x
+
+
+def make_runner(step_fn: Callable[[Any, jax.Array], Any], T: int, *,
+                record_every: int = 0,
+                eval_fn: Optional[Callable[[jax.Array], jax.Array]] = None,
+                x_of: Callable[[Any], jax.Array] = _default_x_of,
+                donate: bool = True):
+    """Build ``runner(state, key) -> (final_state, Trace)``.
+
+    One XLA program for the whole T-step trajectory; compile on first call,
+    reuse for subsequent calls of the same runner (the benchmarks warm up the
+    compile on a throwaway call before timing — see ``timed_run``).
+    """
+    T = int(T)
+    rec = int(record_every) if (record_every and eval_fn is not None) else 0
+    n_chunks = T // rec if rec else 0
+    remainder = T - n_chunks * rec if rec else T
+
+    def step_body(carry, _):
+        state, key = carry
+        key, sub = jax.random.split(key)
+        return (step_fn(state, sub), key), None
+
+    def record(state) -> Tuple[jax.Array, ...]:
+        loss = eval_fn(_mean_model(x_of(state)))
+        zero = jnp.int32(0)
+        # bits keeps its accumulator dtype (float64 under x64, Kahan float32
+        # otherwise — core/bits.py): downcasting here would quantize the
+        # >2^24-bit totals the compensated accumulators exist to preserve
+        return (state.t.astype(jnp.int32), state.bits,
+                jnp.asarray(loss, jnp.float32),
+                getattr(state, "sync_rounds", zero).astype(jnp.int32),
+                getattr(state, "triggers", zero).astype(jnp.int32))
+
+    def chunk_body(carry, _):
+        carry, _ = jax.lax.scan(step_body, carry, None, length=rec)
+        return carry, record(carry[0])
+
+    def program(state, key):
+        carry = (state, key)
+        recs = None
+        if n_chunks:
+            carry, recs = jax.lax.scan(chunk_body, carry, None,
+                                       length=n_chunks)
+        if remainder:
+            carry, _ = jax.lax.scan(step_body, carry, None, length=remainder)
+        return carry[0], recs
+
+    jitted = jax.jit(program, donate_argnums=(0,) if donate else ())
+    compiled = None
+
+    def warmup(state, key) -> None:
+        """AOT-compile for these arg shapes without executing a throwaway
+        T-step run (lowering is abstract — `state`'s buffers are untouched)."""
+        nonlocal compiled
+        if compiled is None:
+            compiled = jitted.lower(state, key).compile()
+
+    def runner(state, key):
+        final, recs = (compiled or jitted)(state, key)
+        if recs is None:
+            return final, Trace.empty()
+        return final, Trace(*jax.device_get(recs))
+
+    runner.warmup = warmup
+    return runner
+
+
+def run_traced(step_fn, state, T: int, key: jax.Array, record_every: int = 0,
+               eval_fn=None, x_of: Callable[[Any], jax.Array] = _default_x_of,
+               donate: bool = True):
+    """One-shot convenience around :func:`make_runner`.
+
+    Returns ``(final_state, Trace)``; the trace is empty unless both
+    ``record_every > 0`` and ``eval_fn`` are given (legacy `run` semantics).
+    """
+    runner = make_runner(step_fn, T, record_every=record_every,
+                         eval_fn=eval_fn, x_of=x_of, donate=donate)
+    return runner(state, key)
+
+
+def timed_run(runner, make_state: Callable[[], Any], key: jax.Array, T: int):
+    """Benchmark-fidelity timing: AOT-compile the runner first, then time one
+    run end to end.
+
+    Returns ``(final_state, trace, us_per_call)`` where ``us_per_call`` is
+    steady-state wall time per step — jit compilation is excluded (the legacy
+    suites started the clock before the first, compiling, step and so folded
+    the whole XLA compile into ``us_per_call``). The warm-up is a compile
+    only, not a throwaway T-step execution.
+    """
+    warmup = getattr(runner, "warmup", None)
+    if warmup is not None:
+        warmup(make_state(), key)
+    else:                                 # generic runner: warm by executing
+        jax.block_until_ready(runner(make_state(), key)[0])
+    t0 = time.perf_counter()
+    state, trace = runner(make_state(), key)
+    jax.block_until_ready(state)
+    dt = time.perf_counter() - t0
+    return state, trace, dt / max(T, 1) * 1e6

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bits as bits_mod
+from repro.core import engine
 from repro.core.compression import Compressor, Identity
 from repro.core.schedule import LRSchedule, fixed
 from repro.core.topology import Topology
@@ -79,7 +80,6 @@ class SparqConfig:
     def resolved_gamma(self) -> float:
         if self.gamma is not None:
             return float(self.gamma)
-        d = 1  # omega may be dimension-dependent; use the conservative omega at d -> inf
         return self.topology.gamma_star(self._omega())
 
     def _omega(self) -> float:
@@ -104,9 +104,11 @@ class SparqState(NamedTuple):
 def init_state(x0: jax.Array, n: int) -> SparqState:
     """x0: (d,) shared init or (n, d) per-node init."""
     x = jnp.broadcast_to(x0, (n, x0.shape[-1])) if x0.ndim == 1 else x0
-    z = jnp.zeros_like(x)
+    x = jnp.array(x)  # materialize (broadcast views can't be donated)
     bits0, bits_c0 = bits_mod.acc_init()
-    return SparqState(x=x, x_hat=z, mom=z, t=jnp.int32(0),
+    # x_hat and mom must be distinct buffers: donated states can't alias
+    return SparqState(x=x, x_hat=jnp.zeros_like(x), mom=jnp.zeros_like(x),
+                      t=jnp.int32(0),
                       bits=bits0, bits_c=bits_c0, sync_rounds=jnp.int32(0),
                       triggers=jnp.int32(0))
 
@@ -170,8 +172,26 @@ def make_step(cfg: SparqConfig, grad_fn: GradFn):
 def run(cfg: SparqConfig, grad_fn: GradFn, x0: jax.Array, T: int,
         key: jax.Array, record_every: int = 0,
         eval_fn: Optional[Callable[[jax.Array], jax.Array]] = None):
-    """Run T steps. Returns (final_state, trace) where trace records
-    (t, bits, eval(x_bar)) every `record_every` steps when eval_fn is given."""
+    """Run T steps inside one chunked-scan XLA program (core/engine.py).
+
+    Returns (final_state, trace) where trace records
+    (t, bits, eval(x_bar), sync_rounds, triggers) every `record_every` steps
+    when eval_fn is given; the trace is computed in-graph and synced to host
+    once. The initial state is built internally and donated to the XLA
+    program. Matches `run_loop` step for step (same sequential key
+    splitting)."""
+    step = make_step(cfg, grad_fn)
+    state = init_state(x0, cfg.topology.n)
+    return engine.run_traced(step, state, T, key, record_every=record_every,
+                             eval_fn=eval_fn)
+
+
+def run_loop(cfg: SparqConfig, grad_fn: GradFn, x0: jax.Array, T: int,
+             key: jax.Array, record_every: int = 0,
+             eval_fn: Optional[Callable[[jax.Array], jax.Array]] = None):
+    """Legacy per-step Python loop — one jitted dispatch + host sync per
+    record point. Kept as the ground-truth driver the chunked-scan engine is
+    pinned against (tests/test_engine.py); use `run` everywhere else."""
     step = jax.jit(make_step(cfg, grad_fn))
     state = init_state(x0, cfg.topology.n)
     trace = []
@@ -187,13 +207,8 @@ def run(cfg: SparqConfig, grad_fn: GradFn, x0: jax.Array, T: int,
 
 def run_scan(cfg: SparqConfig, grad_fn: GradFn, x0: jax.Array, T: int,
              key: jax.Array):
-    """lax.scan variant (fast under jit; no trace)."""
+    """Scan the whole trajectory with no trace (engine with record_every=0)."""
     step = make_step(cfg, grad_fn)
     state = init_state(x0, cfg.topology.n)
-    keys = jax.random.split(key, T)
-
-    def body(s, k):
-        return step(s, k), None
-
-    final, _ = jax.lax.scan(body, state, keys)
+    final, _ = engine.run_traced(step, state, T, key)
     return final

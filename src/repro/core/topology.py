@@ -17,6 +17,7 @@ Metropolis-Hastings (safe for irregular graphs).
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
 
@@ -50,24 +51,53 @@ def complete_adjacency(n: int) -> np.ndarray:
     return np.ones((n, n)) - np.eye(n)
 
 
+def _try_regular(n: int, deg: int, rng) -> Optional[np.ndarray]:
+    """One rejection-sampling attempt at a deg-regular simple graph:
+    deg//2 random cyclic 2-factors plus, for odd deg, one random perfect
+    matching. Returns None on any edge collision (caller retries)."""
+    a = np.zeros((n, n))
+    for _ in range(deg // 2):
+        perm = rng.permutation(n)
+        for i, j in enumerate(perm):
+            if i == j or a[i, j]:
+                return None
+            a[i, j] = a[j, i] = 1
+    if deg % 2 == 1:
+        order = rng.permutation(n)
+        for i, j in zip(order[0::2], order[1::2]):
+            if a[i, j]:
+                return None
+            a[i, j] = a[j, i] = 1
+    return a
+
+
 def random_regular_adjacency(n: int, deg: int, seed: int = 0) -> np.ndarray:
-    """Random regular graph via repeated permutation-matching (expander w.h.p.)."""
+    """Random regular graph via repeated permutation-matching (expander w.h.p.).
+
+    Any degree with 0 < deg < n and n*deg even is supported (odd degree needs
+    an even node count). Dense graphs (deg > (n-1)/2) are sampled as the
+    complement of an (n-1-deg)-regular graph, where rejection sampling
+    actually terminates."""
+    if not 0 < deg < n:
+        raise ValueError(f"need 0 < deg < n, got deg={deg}, n={n}")
+    if (n * deg) % 2 != 0:
+        raise ValueError(
+            f"no {deg}-regular graph on {n} nodes exists: n*deg must be even "
+            f"(odd degree needs an even node count)")
     rng = np.random.default_rng(seed)
+    co_deg = n - 1 - deg                      # complement graph degree
     for _ in range(200):
-        a = np.zeros((n, n))
-        ok = True
-        for _ in range(deg // 2):
-            perm = rng.permutation(n)
-            for i, j in enumerate(perm):
-                if i == j or a[i, j]:
-                    ok = False
-                    break
-                a[i, j] = a[j, i] = 1
-            if not ok:
-                break
-        if ok and deg % 2 == 0 and _connected(a):
+        if co_deg < deg:
+            co = (_try_regular(n, co_deg, rng) if co_deg
+                  else np.zeros((n, n)))
+            a = None if co is None else complete_adjacency(n) - co
+        else:
+            a = _try_regular(n, deg, rng)
+        if a is not None and _connected(a):
             return a
-    raise RuntimeError("failed to sample a random regular graph")
+    raise RuntimeError(
+        f"failed to sample a connected {deg}-regular graph on {n} nodes "
+        f"after 200 attempts")
 
 
 def _connected(a: np.ndarray) -> bool:

@@ -6,8 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.compression import (QSGD, QsTopK, RandK, Sign, SignTopK,
                                     TopFrac, TopK, make_compressor, qsgd_beta)

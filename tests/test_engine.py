@@ -1,0 +1,137 @@
+"""Chunked-scan engine (core/engine.py) pinned trace-equal to the legacy
+per-step Python-loop drivers on a small convex problem: same (t, bits, loss)
+tuples within float tolerance, for SPARQ and the vanilla/central baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, engine
+from repro.core.compression import SignTopK
+from repro.core.schedule import decaying
+from repro.core.sparq import (SparqConfig, init_state, make_step, run,
+                              run_loop)
+from repro.core.topology import make_topology
+from repro.core.triggers import constant
+from repro.data.synthetic import convex_dataset, logistic_loss_and_grad
+
+N, F, C = 6, 16, 4
+D = F * C
+T, REC = 83, 20   # T % REC != 0: remainder steps must still run, unrecorded
+
+
+@pytest.fixture(scope="module")
+def problem():
+    X, Y = convex_dataset(N, 40, n_features=F, n_classes=C, seed=0)
+    Xj, Yj = jnp.asarray(X), jnp.asarray(Y)
+    _, make_grad_fn, full_loss = logistic_loss_and_grad(C)
+    grad_fn = make_grad_fn(Xj, Yj, 4)
+
+    def eval_fn(xbar):
+        return full_loss(xbar, Xj, Yj)
+
+    return grad_fn, eval_fn
+
+
+def assert_traces_equal(tr_engine, tr_loop):
+    assert len(tr_engine) == len(tr_loop) > 0
+    for e, l in zip(tr_engine, tr_loop):
+        assert e[0] == l[0]                                   # t
+        np.testing.assert_allclose(e[1], l[1], rtol=1e-6)     # bits
+        np.testing.assert_allclose(e[2], l[2], rtol=1e-4,     # loss
+                                   atol=1e-5)
+        assert e[3:] == tuple(l[3:]) or not l[3:]             # rounds/triggers
+
+
+def test_run_traced_matches_loop_sparq(problem):
+    grad_fn, eval_fn = problem
+    topo = make_topology("ring", N)
+    cfg = SparqConfig(topology=topo, compressor=SignTopK(k=6),
+                      threshold=constant(50.0), lr=decaying(1.0, 50.0),
+                      H=5, gamma=0.3)
+    key = jax.random.PRNGKey(0)
+    st_e, tr_e = run(cfg, grad_fn, jnp.zeros(D), T, key,
+                     record_every=REC, eval_fn=eval_fn)
+    st_l, tr_l = run_loop(cfg, grad_fn, jnp.zeros(D), T, key,
+                          record_every=REC, eval_fn=eval_fn)
+    assert_traces_equal(tr_e, tr_l)
+    assert len(tr_e) == T // REC
+    np.testing.assert_allclose(np.array(st_e.x), np.array(st_l.x),
+                               rtol=1e-5, atol=1e-6)
+    assert int(st_e.t) == int(st_l.t) == T
+    assert float(st_e.bits) == pytest.approx(float(st_l.bits), rel=1e-6)
+    assert int(st_e.sync_rounds) == int(st_l.sync_rounds)
+    assert int(st_e.triggers) == int(st_l.triggers)
+
+
+def test_run_traced_matches_loop_vanilla(problem):
+    grad_fn, eval_fn = problem
+    topo = make_topology("ring", N)
+    lr = decaying(1.0, 50.0)
+    step = baselines.make_vanilla_step(topo, lr, grad_fn)
+    key = jax.random.PRNGKey(1)
+    st_e, tr_e = baselines.run_generic(step, baselines.init_vanilla(
+        jnp.zeros(D), N), T, key, record_every=REC, eval_fn=eval_fn)
+    st_l, tr_l = baselines.run_generic_loop(step, baselines.init_vanilla(
+        jnp.zeros(D), N), T, key, record_every=REC, eval_fn=eval_fn)
+    assert_traces_equal(tr_e, tr_l)
+    np.testing.assert_allclose(np.array(st_e.x), np.array(st_l.x),
+                               rtol=1e-5, atol=1e-6)
+    assert float(st_e.bits) == pytest.approx(float(st_l.bits), rel=1e-6)
+
+
+def test_run_traced_matches_loop_central(problem):
+    grad_fn, eval_fn = problem
+    lr = decaying(1.0, 50.0)
+    step = baselines.make_central_step(N, lr, grad_fn)
+    key = jax.random.PRNGKey(2)
+    st_e, tr_e = baselines.run_generic(step, baselines.init_central(
+        jnp.zeros(D)), T, key, record_every=REC, eval_fn=eval_fn)
+    st_l, tr_l = baselines.run_generic_loop(step, baselines.init_central(
+        jnp.zeros(D)), T, key, record_every=REC, eval_fn=eval_fn)
+    assert_traces_equal(tr_e, tr_l)
+    np.testing.assert_allclose(np.array(st_e.x), np.array(st_l.x),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_trace_object_tuple_compat():
+    """Trace behaves like the legacy list of (t, bits, loss, ...) tuples and
+    round-trips to the BENCH_*.json columnar dict."""
+    tr = engine.Trace([10, 20], [1.0, 2.0], [0.5, 0.25], [2, 4], [3, 6])
+    assert len(tr) == 2
+    t, bits, loss, rounds, trig = tr[-1]
+    assert (t, bits, loss, rounds, trig) == (20, 2.0, 0.25, 4, 6)
+    assert [r[0] for r in tr] == [10, 20]
+    d = tr.to_dict()
+    assert d["t"] == [10, 20] and d["loss"] == [0.5, 0.25]
+    assert len(engine.Trace.empty()) == 0
+
+
+def test_no_trace_without_eval_fn():
+    """record_every without eval_fn mirrors legacy run(): empty trace, but the
+    full T steps still execute."""
+    b = jax.random.normal(jax.random.PRNGKey(0), (4, 8))
+
+    def grad_fn(x, t, k):
+        return x - b
+
+    topo = make_topology("ring", 4)
+    cfg = SparqConfig(topology=topo, compressor=SignTopK(k=4),
+                      lr=decaying(1.0, 50.0), H=2, gamma=0.3)
+    st, tr = run(cfg, grad_fn, jnp.zeros(8), 10, jax.random.PRNGKey(0),
+                 record_every=5)
+    assert len(tr) == 0
+    assert int(st.t) == 10
+
+
+def test_timed_run_excludes_compile(problem):
+    grad_fn, eval_fn = problem
+    topo = make_topology("ring", N)
+    cfg = SparqConfig(topology=topo, compressor=SignTopK(k=6),
+                      lr=decaying(1.0, 50.0), H=5, gamma=0.3)
+    runner = engine.make_runner(make_step(cfg, grad_fn), T,
+                                record_every=REC, eval_fn=eval_fn)
+    st, tr, us = engine.timed_run(runner, lambda: init_state(jnp.zeros(D), N),
+                                  jax.random.PRNGKey(0), T)
+    assert int(st.t) == T and len(tr) == T // REC
+    assert 0 < us < 1e5   # steady-state us/step, not a multi-second compile

@@ -2,10 +2,10 @@
 graphs, Lemma 6 constants in range."""
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
-from repro.core.topology import Topology, make_topology
+from repro.core.topology import (Topology, make_topology,
+                                 random_regular_adjacency)
 
 
 @settings(max_examples=20, deadline=None)
@@ -54,3 +54,27 @@ def test_spectral_gap_known_values():
 def test_neighbors():
     t = make_topology("ring", 6)
     assert set(t.neighbors(0)) == {1, 5}
+
+
+def test_odd_degree_expander():
+    """Regression: odd deg used to burn all 200 resamples (the deg%2 check sat
+    inside the retry loop) and raise a misleading 'failed to sample' error.
+    Odd degrees are now built via one extra perfect matching."""
+    for n, deg, seed in ((16, 3, 0), (16, 3, 1), (10, 5, 2), (8, 7, 0)):
+        a = random_regular_adjacency(n, deg, seed=seed)
+        assert (a.sum(1) == deg).all(), (n, deg)
+        assert np.allclose(a, a.T)
+        assert np.trace(a) == 0
+    t = make_topology("expander", 16, deg=3, seed=1)
+    t.validate()
+    assert t.delta > 0
+
+
+def test_impossible_regular_graph_raises_upfront():
+    # n*deg odd -> no such graph; must be a clear ValueError, not 200 retries
+    with pytest.raises(ValueError, match="must be even"):
+        random_regular_adjacency(15, 3)
+    with pytest.raises(ValueError, match="deg"):
+        random_regular_adjacency(8, 8)   # deg >= n
+    with pytest.raises(ValueError, match="deg"):
+        random_regular_adjacency(8, 0)
