@@ -11,7 +11,7 @@ import jax.numpy as jnp
 from repro.core import engine
 from repro.core.compression import SignTopK
 from repro.core.schedule import decaying
-from repro.core.sparq import SparqConfig, init_state, make_step
+from repro.core.sparq import SparqConfig, make_step
 from repro.core.topology import make_topology
 from repro.core.triggers import constant, zero
 from repro.data.synthetic import convex_dataset, logistic_loss_and_grad
@@ -48,7 +48,7 @@ def run_bench(quick: bool = True) -> List[Dict]:
         runner = engine.make_runner(make_step(cfg, grad_fn), T,
                                     record_every=rec, eval_fn=eval_fn)
         st, trace, us = engine.timed_run(
-            runner, lambda: init_state(x0, n), key, T)
+            runner, lambda: cfg.init_state(x0), key, T)
         # evaluate on the true step-T iterate (the last trace record sits at
         # (T//rec)*rec, which is < T when rec does not divide T)
         final_loss = float(eval_fn(jnp.mean(st.x, 0)))

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from repro.core import baselines, engine
 from repro.core.compression import Sign, SignTopK, TopK
 from repro.core.schedule import decaying
-from repro.core.sparq import SparqConfig, init_state, make_step
+from repro.core.sparq import SparqConfig, make_step
 from repro.core.topology import make_topology
 from repro.core.triggers import piecewise, zero
 from repro.data.synthetic import convex_dataset, logistic_loss_and_grad
@@ -52,7 +52,7 @@ def run_bench(quick: bool = True) -> List[Dict]:
         runner = engine.make_runner(make_step(cfg, grad_fn), T,
                                     record_every=rec, eval_fn=eval_fn)
         st, trace, us = engine.timed_run(
-            runner, lambda: init_state(x0, n), key, T)
+            runner, lambda: cfg.init_state(x0), key, T)
         final = trace[-1]
         results.append({
             "name": name, "us_per_call": round(us, 1),

@@ -1,72 +1,38 @@
 """Figure 1c/1d analog (non-convex): a small transformer LM trained with
-SPARQ-SGD over an 8-node ring with momentum 0.9, Top-10%+Sign per tensor and a
+SPARQ-SGD over an n-node ring with momentum 0.9, Top-10%+Sign per tensor and a
 piecewise-increasing trigger (the paper's Section 5.2 recipe, with the CIFAR
 ResNet-20 swapped for a reduced LM on the synthetic token pipeline — DESIGN §5).
 
-Runs on ONE device: the n-node ensemble is vmapped through a flattened
-parameter vector so the exact Algorithm-1 engine (core/sparq.py) drives a real
-model — this is the reference-engine <-> model integration the multi-device
-path mirrors.
+The workload (model, pipeline, grad/eval closures, LR) is shared with the
+momentum suite via benchmarks/lm_workload.py so the two stay comparable by
+construction.
 """
 from __future__ import annotations
 
 from typing import Dict, List
 
 import jax
-import jax.numpy as jnp
-from jax.flatten_util import ravel_pytree
 
 from repro.core import baselines, engine
 from repro.core.compression import Sign, TopFrac
-from repro.core.schedule import warmup_piecewise
-from repro.core.sparq import SparqConfig, init_state, make_step
-from repro.core.topology import make_topology
+from repro.core.sparq import SparqConfig, make_step
 from repro.core.triggers import piecewise, zero
-from repro.configs.registry import get_config
-from repro.data.synthetic import TokenPipeline
-from repro.models.transformer import init_params, lm_loss
+from repro.optim.sgd import momentum
+
+from benchmarks.lm_workload import make_lm_workload
 
 
 def run_bench(quick: bool = True) -> List[Dict]:
-    n = 4 if quick else 8
-    T = 60 if quick else 600
-    rec = max(T // 6, 1)
-    cfg = get_config("qwen1.5-0.5b").reduced(
-        n_layers=2, d_model=128, vocab=256)
-    pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=32,
-                         batch_per_node=4, n_nodes=n, seed=0)
-    p0 = init_params(cfg, jax.random.PRNGKey(0))
-    flat0, unravel = ravel_pytree(p0)
-    d = flat0.shape[0]
-
-    def node_loss(flat, batch):
-        return lm_loss(cfg, unravel(flat), batch)[0]
-
-    gfun = jax.grad(node_loss)
-
-    def grad_fn(x_nd, t, key):
-        # deterministic heterogeneous batches per (node, step)
-        def one(i, x):
-            b = pipe.batch(i, 0)  # fixed batch per node (quick benchmark)
-            return gfun(x, {k: jnp.asarray(v) for k, v in b.items()})
-        return jnp.stack([one(i, x_nd[i]) for i in range(n)])
-
-    topo = make_topology("ring", n)
-    lr = warmup_piecewise(0.3, warmup=5, milestones=[T // 2, 3 * T // 4],
-                          factor=0.2)
+    wl = make_lm_workload(quick)
+    n, T, rec = wl.n, wl.T, wl.rec
     key = jax.random.PRNGKey(1)
-
-    def eval_fn(xbar):
-        b = pipe.batch(0, 0)
-        return node_loss(xbar, {k: jnp.asarray(v) for k, v in b.items()})
-
     results = []
 
     def record(name, cfg_s):
-        runner = engine.make_runner(make_step(cfg_s, grad_fn), T,
-                                    record_every=rec, eval_fn=eval_fn)
+        runner = engine.make_runner(make_step(cfg_s, wl.grad_fn), T,
+                                    record_every=rec, eval_fn=wl.eval_fn)
         st, trace, us = engine.timed_run(
-            runner, lambda: init_state(flat0, n), key, T)
+            runner, lambda: cfg_s.init_state(wl.flat0), key, T)
         results.append({
             "name": name, "us_per_call": round(us, 1),
             "final_loss": round(trace[-1][2], 4), "bits": trace[-1][1],
@@ -75,23 +41,26 @@ def run_bench(quick: bool = True) -> List[Dict]:
 
     thr = piecewise(2.0, 1.0, every=max(T // 6, 1), until=T)
     record("sparq_signtop10_mom", SparqConfig(
-        topology=topo, compressor=TopFrac(frac=0.1),
-        threshold=thr, lr=lr, H=5, momentum=0.9))
+        topology=wl.topo, compressor=TopFrac(frac=0.1),
+        threshold=thr, lr=wl.lr, H=5, momentum=0.9))
     record("sparq_no_trigger", SparqConfig(
-        topology=topo, compressor=TopFrac(frac=0.1), threshold=zero(),
-        lr=lr, H=5, momentum=0.9))
+        topology=wl.topo, compressor=TopFrac(frac=0.1), threshold=zero(),
+        lr=wl.lr, H=5, momentum=0.9))
     record("choco_sign", SparqConfig(
-        topology=topo, compressor=Sign(), threshold=zero(), lr=lr, H=1,
+        topology=wl.topo, compressor=Sign(), threshold=zero(), lr=wl.lr, H=1,
         momentum=0.9))
     record("choco_top10", SparqConfig(
-        topology=topo, compressor=TopFrac(frac=0.1), threshold=zero(),
-        lr=lr, H=1, momentum=0.9))
+        topology=wl.topo, compressor=TopFrac(frac=0.1), threshold=zero(),
+        lr=wl.lr, H=1, momentum=0.9))
 
-    # vanilla decentralized SGD
-    vstep = baselines.make_vanilla_step(topo, lr, grad_fn, momentum=0.9)
-    vrunner = engine.make_runner(vstep, T, record_every=rec, eval_fn=eval_fn)
+    # vanilla decentralized SGD (+ the same momentum)
+    vopt = momentum(0.9)
+    vstep = baselines.make_vanilla_step(wl.topo, wl.lr, wl.grad_fn,
+                                        optimizer=vopt)
+    vrunner = engine.make_runner(vstep, T, record_every=rec,
+                                 eval_fn=wl.eval_fn)
     vstate, vtrace, vus = engine.timed_run(
-        vrunner, lambda: baselines.init_vanilla(flat0, n), key, T)
+        vrunner, lambda: baselines.init_vanilla(wl.flat0, n, vopt), key, T)
     results.append({"name": "vanilla_decentralized",
                     "us_per_call": round(vus, 1),
                     "final_loss": round(vtrace[-1][2], 4),

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from repro.core import engine
 from repro.core.compression import SignTopK
 from repro.core.schedule import decaying
-from repro.core.sparq import SparqConfig, init_state, make_step
+from repro.core.sparq import SparqConfig, make_step
 from repro.core.topology import make_topology
 from repro.core.triggers import zero
 from repro.data.synthetic import convex_dataset, logistic_loss_and_grad
@@ -46,7 +46,7 @@ def run_bench(quick: bool = True) -> List[Dict]:
         runner = engine.make_runner(make_step(cfg, grad_fn), T,
                                     record_every=rec, eval_fn=eval_fn)
         st, trace, us = engine.timed_run(
-            runner, lambda: init_state(x0, n), jax.random.PRNGKey(0), T)
+            runner, lambda: cfg.init_state(x0), jax.random.PRNGKey(0), T)
         xbar = jnp.mean(st.x, 0)
         consensus = float(jnp.linalg.norm(st.x - xbar[None]))
         rows.append({

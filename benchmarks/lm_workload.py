@@ -1,0 +1,70 @@
+"""Shared non-convex LM workload for the nonconvex and momentum suites.
+
+One place defines the reduced transformer, the per-node token pipeline, the
+flattened-parameter grad/eval closures and the ring/LR recipe, so the two
+suites stay comparable by construction (same seeds, same batches, same
+schedule) and workload changes cannot silently land in only one of them.
+
+The n-node ensemble drives the exact Algorithm-1 reference engine
+(core/sparq.py) through a ravel_pytree adapter on ONE device — the
+reference-engine <-> model integration the multi-device path mirrors.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.core.schedule import warmup_piecewise
+from repro.core.topology import Topology, make_topology
+from repro.configs.registry import get_config
+from repro.data.synthetic import TokenPipeline
+from repro.models.transformer import init_params, lm_loss
+
+
+class LMWorkload(NamedTuple):
+    n: int
+    T: int
+    rec: int            # trace record interval
+    flat0: jax.Array    # flattened initial parameters (the shared x^0)
+    topo: Topology
+    lr: object          # LRSchedule
+    grad_fn: object     # (n, d) stochastic gradients for the reference engine
+    eval_fn: object     # loss(x_bar) on node 0's fixed batch
+
+
+def make_lm_workload(quick: bool = True) -> LMWorkload:
+    n = 4 if quick else 8
+    T = 60 if quick else 600
+    rec = max(T // 6, 1)
+    cfg = get_config("qwen1.5-0.5b").reduced(
+        n_layers=2, d_model=128, vocab=256)
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=32,
+                         batch_per_node=4, n_nodes=n, seed=0)
+    p0 = init_params(cfg, jax.random.PRNGKey(0))
+    flat0, unravel = ravel_pytree(p0)
+
+    def node_loss(flat, batch):
+        return lm_loss(cfg, unravel(flat), batch)[0]
+
+    gfun = jax.grad(node_loss)
+
+    def grad_fn(x_nd, t, key):
+        # heterogeneous data: each node holds its own fixed batch (quick
+        # benchmark setting — batches vary per node, not per step)
+        def one(i, x):
+            b = pipe.batch(i, 0)
+            return gfun(x, {k: jnp.asarray(v) for k, v in b.items()})
+        return jnp.stack([one(i, x_nd[i]) for i in range(n)])
+
+    def eval_fn(xbar):
+        b = pipe.batch(0, 0)
+        return node_loss(xbar, {k: jnp.asarray(v) for k, v in b.items()})
+
+    topo = make_topology("ring", n)
+    lr = warmup_piecewise(0.3, warmup=5, milestones=[T // 2, 3 * T // 4],
+                          factor=0.2)
+    return LMWorkload(n=n, T=T, rec=rec, flat0=flat0, topo=topo, lr=lr,
+                      grad_fn=grad_fn, eval_fn=eval_fn)

@@ -2,15 +2,19 @@
 
   bench_convex     -> Figure 1a/1b (convex; loss vs rounds and vs bits)
   bench_nonconvex  -> Figure 1c/1d (non-convex LM; loss vs bits, momentum)
+  bench_momentum   -> SQuARM-SGD momentum study (SPARQ vs SQuARM vs
+                      CHOCO+momentum vs vanilla+momentum)
   bench_ablation   -> Remark 4 (H / omega / trigger ablations)
   bench_topology   -> Footnote 5 (expander vs ring vs torus)
   bench_kernels    -> compression hot-spot kernels (us/call + empirical omega)
   roofline         -> §Roofline summary from dry-run artifacts
 
 Prints ``name,us_per_call,derived`` CSV and writes one machine-readable
-``BENCH_<suite>.json`` artifact per suite to ``--out-dir`` (default
-``results/``) so the perf trajectory is tracked PR-over-PR — see the README
-"Benchmarks" section for the schema. ``--full`` runs paper-scale settings.
+``BENCH_<suite>.json`` artifact per suite to BOTH ``--out-dir`` (default
+``results/``) and the canonical repo-root copy (``--root-dir``; same
+schema_version) so the root-level perf trajectory is tracked PR-over-PR — see
+the README "Benchmarks" section for the schema. ``--full`` runs paper-scale
+settings.
 """
 from __future__ import annotations
 
@@ -39,11 +43,12 @@ def _finite(obj):
     return obj
 
 
-def write_artifact(out_dir: str, suite: str, quick: bool, rows,
-                   elapsed_s: float, error: str = "") -> str:
-    """BENCH_<suite>.json: schema header + the suite's rows (full traces)."""
-    os.makedirs(out_dir, exist_ok=True)
-    path = os.path.join(out_dir, f"BENCH_{suite}.json")
+def write_artifact(out_dirs, suite: str, quick: bool, rows,
+                   elapsed_s: float, error: str = ""):
+    """BENCH_<suite>.json: schema header + the suite's rows (full traces).
+
+    ``out_dirs`` is one directory or a list; the same document is written to
+    each (results/ scratch copy + the canonical repo-root trajectory file)."""
     doc = {
         "schema_version": SCHEMA_VERSION,
         "suite": suite,
@@ -53,30 +58,42 @@ def write_artifact(out_dir: str, suite: str, quick: bool, rows,
         "error": error,
         "rows": _finite(rows),
     }
-    with open(path, "w") as f:
-        json.dump(doc, f, default=str, allow_nan=False)
-    return path
+    if isinstance(out_dirs, str):
+        out_dirs = [out_dirs]
+    paths = []
+    for out_dir in out_dirs:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, f"BENCH_{suite}.json")
+        with open(path, "w") as f:
+            json.dump(doc, f, default=str, allow_nan=False)
+        paths.append(path)
+    return paths
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--suite", default="all",
-                    choices=["all", "convex", "nonconvex", "ablation",
-                             "topology", "kernels", "roofline"])
-    ap.add_argument("--out-dir", default=os.path.join(
-        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-        "results"))
+                    choices=["all", "convex", "nonconvex", "momentum",
+                             "ablation", "topology", "kernels", "roofline"])
+    ap.add_argument("--out-dir", default=os.path.join(root, "results"))
+    ap.add_argument("--root-dir", default=root,
+                    help="second copy of each BENCH_<suite>.json (the "
+                         "canonical root-level perf-trajectory artifact); "
+                         "'' disables")
     ap.add_argument("--no-artifacts", action="store_true",
                     help="CSV to stdout only; skip BENCH_*.json")
     args = ap.parse_args(argv)
     quick = not args.full
 
     from benchmarks import (bench_ablation, bench_convex, bench_kernels,
-                            bench_nonconvex, bench_topology, roofline)
+                            bench_momentum, bench_nonconvex, bench_topology,
+                            roofline)
     suites = {
         "convex": bench_convex.run_bench,
         "nonconvex": bench_nonconvex.run_bench,
+        "momentum": bench_momentum.run_bench,
         "ablation": bench_ablation.run_bench,
         "topology": bench_topology.run_bench,
         "kernels": bench_kernels.run_bench,
@@ -98,7 +115,8 @@ def main(argv=None) -> None:
             print(f"{sname}_ERROR,0,\"{err}\"")
         elapsed = time.perf_counter() - t0
         if not args.no_artifacts:
-            write_artifact(args.out_dir, sname, quick, rows, elapsed, err)
+            dirs = [args.out_dir] + ([args.root_dir] if args.root_dir else [])
+            write_artifact(dirs, sname, quick, rows, elapsed, err)
         for r in rows:
             r = dict(r)
             name = r.pop("name")

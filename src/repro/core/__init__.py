@@ -6,7 +6,7 @@ from repro.core.schedule import (LRSchedule, decaying, fixed, is_sync,
                                  theorem1_lr, theorem2_lr, warmup_piecewise)
 from repro.core.engine import Trace, make_runner, run_traced, timed_run
 from repro.core.sparq import (SparqConfig, SparqState, init_state, make_step,
-                              run, run_loop, run_scan)
+                              run, run_loop, run_scan, squarm_config)
 from repro.core.topology import Topology, make_topology
 from repro.core.triggers import (ThresholdSchedule, constant, make_schedule,
                                  piecewise, poly, should_trigger, zero)
@@ -16,6 +16,7 @@ __all__ = [
     "TopFrac", "TopK", "make_compressor", "LRSchedule", "decaying", "fixed",
     "is_sync", "theorem1_lr", "theorem2_lr", "warmup_piecewise", "SparqConfig",
     "SparqState", "init_state", "make_step", "run", "run_loop", "run_scan",
+    "squarm_config",
     "Trace", "make_runner", "run_traced", "timed_run", "Topology",
     "make_topology", "ThresholdSchedule", "constant", "make_schedule",
     "piecewise", "poly", "should_trigger", "zero",

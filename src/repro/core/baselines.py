@@ -11,7 +11,7 @@
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,93 +23,96 @@ from repro.core.schedule import LRSchedule
 from repro.core.sparq import GradFn, SparqConfig, SparqState, init_state, make_step
 from repro.core.topology import Topology
 from repro.core.triggers import zero
+from repro.optim.sgd import Optimizer, resolve_optimizer
 
 
 def choco_config(topology: Topology, compressor: Compressor, lr: LRSchedule,
-                 gamma: Optional[float] = None, momentum: float = 0.0) -> SparqConfig:
+                 gamma: Optional[float] = None, momentum: float = 0.0,
+                 optimizer: Optional[Optimizer] = None) -> SparqConfig:
     """CHOCO-SGD == SPARQ-SGD(H=1, c_t=0)."""
     return SparqConfig(topology=topology, compressor=compressor, threshold=zero(),
-                       lr=lr, H=1, gamma=gamma, momentum=momentum)
+                       lr=lr, H=1, gamma=gamma, momentum=momentum,
+                       optimizer=optimizer)
 
 
 class VanillaState(NamedTuple):
     x: jax.Array
-    mom: jax.Array
+    opt: Any                # optimizer state pytree (see optim/sgd.py)
     t: jax.Array
     bits: jax.Array
     bits_c: jax.Array       # Kahan compensation (see core/bits.py)
 
 
 def make_vanilla_step(topology: Topology, lr: LRSchedule, grad_fn: GradFn,
-                      momentum: float = 0.0):
-    """Decentralized vanilla SGD: exact neighbor averaging every step."""
+                      momentum: float = 0.0,
+                      optimizer: Optional[Optimizer] = None):
+    """Decentralized vanilla SGD: exact neighbor averaging every step.
+
+    The local update runs through the shared optimizer seam; ``momentum`` is
+    shorthand for ``optimizer=optim.momentum(beta)``."""
+    opt = resolve_optimizer(optimizer, momentum)
     W = jnp.asarray(topology.w, jnp.float32)
-    deg = jnp.asarray((topology.w > 0).sum(1) - 1, jnp.float32)
+    deg = jnp.asarray(topology.degrees, jnp.float32)
 
     def step(state: VanillaState, key: jax.Array) -> VanillaState:
         d = state.x.shape[-1]
         g = grad_fn(state.x, state.t, key)
         eta = lr(state.t)
-        if momentum > 0.0:
-            mom = momentum * state.mom + g
-            upd = mom
-        else:
-            mom, upd = state.mom, g
-        x_half = state.x - eta * upd
+        x_half, opt_new = opt.update(g, state.opt, state.x, eta)
         x_new = (x_half.T @ W.T).T          # X W  (W symmetric)
         new_bits, new_c = bits_mod.acc_add(
             state.bits, state.bits_c, jnp.sum(deg) * bits_mod.dense_bits(d))
-        return VanillaState(x=x_new, mom=mom, t=state.t + 1, bits=new_bits,
+        return VanillaState(x=x_new, opt=opt_new, t=state.t + 1, bits=new_bits,
                             bits_c=new_c)
 
     return step
 
 
-def init_vanilla(x0: jax.Array, n: int) -> VanillaState:
+def init_vanilla(x0: jax.Array, n: int,
+                 optimizer: Optional[Optimizer] = None) -> VanillaState:
     x = jnp.broadcast_to(x0, (n, x0.shape[-1])) if x0.ndim == 1 else x0
     x = jnp.array(x)  # own buffer: run_generic donates the state (engine.py)
     bits0, bits_c0 = bits_mod.acc_init()
-    return VanillaState(x=x, mom=jnp.zeros_like(x), t=jnp.int32(0),
-                        bits=bits0, bits_c=bits_c0)
+    return VanillaState(x=x, opt=(optimizer or resolve_optimizer(None)).init(x),
+                        t=jnp.int32(0), bits=bits0, bits_c=bits_c0)
 
 
 class CentralState(NamedTuple):
     x: jax.Array          # (d,)
-    mom: jax.Array
+    opt: Any
     t: jax.Array
     bits: jax.Array
     bits_c: jax.Array
 
 
 def make_central_step(n: int, lr: LRSchedule, grad_fn: GradFn,
-                      momentum: float = 0.0):
+                      momentum: float = 0.0,
+                      optimizer: Optional[Optimizer] = None):
     """Centralized minibatch SGD over the same n data shards (rate target)."""
+    opt = resolve_optimizer(optimizer, momentum)
 
     def step(state: CentralState, key: jax.Array) -> CentralState:
         d = state.x.shape[-1]
         xs = jnp.broadcast_to(state.x, (n, d))
         g = jnp.mean(grad_fn(xs, state.t, key), axis=0)
         eta = lr(state.t)
-        if momentum > 0.0:
-            mom = momentum * state.mom + g
-            upd = mom
-        else:
-            mom, upd = state.mom, g
+        x_new, opt_new = opt.update(g, state.opt, state.x, eta)
         # ring all-reduce: each node sends 2(n-1)/n * 32d bits
         new_bits, new_c = bits_mod.acc_add(
             state.bits, state.bits_c,
             jnp.asarray(n * 2.0 * (n - 1) / n * bits_mod.dense_bits(d)))
-        return CentralState(x=state.x - eta * upd, mom=mom, t=state.t + 1,
+        return CentralState(x=x_new, opt=opt_new, t=state.t + 1,
                             bits=new_bits, bits_c=new_c)
 
     return step
 
 
-def init_central(x0: jax.Array) -> CentralState:
+def init_central(x0: jax.Array,
+                 optimizer: Optional[Optimizer] = None) -> CentralState:
     bits0, bits_c0 = bits_mod.acc_init()
     x = jnp.array(x0)  # own buffer: run_generic donates the state (engine.py)
-    return CentralState(x=x, mom=jnp.zeros_like(x), t=jnp.int32(0),
-                        bits=bits0, bits_c=bits_c0)
+    return CentralState(x=x, opt=(optimizer or resolve_optimizer(None)).init(x),
+                        t=jnp.int32(0), bits=bits0, bits_c=bits_c0)
 
 
 def run_generic(step, state, T: int, key: jax.Array, record_every: int = 0,

@@ -246,13 +246,32 @@ class QsTopK(Compressor):
 
 @dataclasses.dataclass(frozen=True)
 class TopFrac(SignTopK):
-    """SignTopK with k = ceil(frac * d) — Section 5.2 uses top 10% per tensor."""
+    """SignTopK with k = ceil(frac * d) — Section 5.2 uses top 10% per tensor.
 
+    The inherited fixed-``k`` field is meaningless here (k is derived from
+    ``frac``): passing one is rejected instead of silently ignored."""
+
+    k: Optional[int] = None          # rejected: TopFrac derives k from frac
     frac: float = 0.1
     name: str = "signtop_frac"
 
+    def __post_init__(self):
+        if self.k is not None:
+            raise ValueError(
+                "TopFrac/signtop_frac derives k = ceil(frac * d); passing "
+                f"k={self.k!r} would be silently ignored — use frac= instead")
+        if not 0.0 < self.frac <= 1.0:
+            raise ValueError(f"TopFrac needs 0 < frac <= 1, got {self.frac!r}")
+
     def _k(self, d: int) -> int:
         return max(1, int(math.ceil(self.frac * d)))
+
+    def omega(self, d):
+        # the Section-5.2 gamma* proxy both engines share: TopFrac keeps a
+        # k = ceil(frac*d) mass of every tensor, so use the TopK-style k/d
+        # (== frac in the d->inf limit) rather than SignTopK's adversarial
+        # per-coordinate 1/d, which over-damps gamma* by ~frac*d
+        return self._k(d) / d
 
     def __call__(self, x, key=None):
         d = x.shape[-1]
@@ -262,9 +281,6 @@ class TopFrac(SignTopK):
         scale = jnp.sum(jnp.abs(xk)) / k
         s = jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
         return scale * s * mask
-
-    def omega(self, d):
-        return 1.0 / d
 
     def bits(self, d):
         return bits_mod.signtopk_bits(d, self._k(d))

@@ -10,6 +10,10 @@ bit on the same inputs, modulo sharding). It keeps the whole node ensemble as de
     X^{t+1}   = X^{t+1/2} + gamma X_hat^{t+1} (W - I)
 
 Notes:
+* The local update X^t -> X^{t+1/2} goes through the pluggable optimizer seam
+  (optim/sgd.py): plain SGD reproduces Algorithm 1 exactly, heavyball/Nesterov
+  momentum gives SQuARM-SGD [Singh et al., 2020] (see ``squarm_config``); the
+  optimizer state rides in ``SparqState.opt`` and is never communicated.
 * Every node maintains estimates x_hat_j of its neighbors; since updates q_j are
   broadcast identically, one global X_hat matrix represents all copies consistently
   (the paper uses the same representation in matrix form).
@@ -22,7 +26,7 @@ Notes:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +38,7 @@ from repro.core.compression import Compressor, Identity
 from repro.core.schedule import LRSchedule, fixed
 from repro.core.topology import Topology
 from repro.core.triggers import ThresholdSchedule, zero
+from repro.optim.sgd import Optimizer, momentum as momentum_opt, resolve_optimizer
 
 GradFn = Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
 # grad_fn(x: (n, d), t: int32 scalar, key) -> (n, d) stochastic gradients
@@ -75,24 +80,43 @@ class SparqConfig:
     lr: LRSchedule = fixed(0.1)
     H: int = 1                      # gap(I_T): sync every H steps
     gamma: Optional[float] = None   # None -> gamma* from Lemma 6
-    momentum: float = 0.0           # Section 5.2 uses 0.9 (theory uses 0)
+    momentum: float = 0.0           # shorthand for optimizer=momentum(beta);
+                                    # Section 5.2 uses 0.9 (theory uses 0)
+    optimizer: Optional[Optimizer] = None  # local-update rule; None -> sgd()
 
-    def resolved_gamma(self) -> float:
+    def resolved_optimizer(self) -> Optimizer:
+        return resolve_optimizer(self.optimizer, self.momentum)
+
+    def resolved_gamma(self, d: Optional[int] = None) -> float:
+        """Consensus stepsize; Lemma-6 gamma* needs the true model dimension
+        ``d`` because the compressor contraction omega is dimension-dependent
+        (TopK(k) at d=20 has omega 0.5, not k/4096)."""
         if self.gamma is not None:
             return float(self.gamma)
-        return self.topology.gamma_star(self._omega())
+        if not d:
+            raise ValueError(
+                "resolved_gamma() needs the model dimension d when gamma is "
+                "None: Lemma-6 gamma* depends on the compressor's omega(d)")
+        return self.topology.gamma_star(self._omega(d))
 
-    def _omega(self) -> float:
-        # a representative omega for gamma*: use the operator's omega at large d;
-        # for Sign-type ops this is the worst case 1/d ~ 0 -> guard with a floor.
-        om = self.compressor.omega(4096)
+    def _omega(self, d: int) -> float:
+        # Sign-type ops report the worst case 1/d -> guard with a floor so
+        # gamma* never collapses to 0 at large d.
+        om = self.compressor.omega(d)
         return max(om, 1e-3)
+
+    def init_state(self, x0: jax.Array) -> "SparqState":
+        """State matching THIS config's optimizer — the safe way to build
+        fresh states for a step from ``make_step(cfg, ...)`` (a bare
+        ``init_state(x0, n)`` only fits momentum-free configs)."""
+        return init_state(x0, self.topology.n, self.resolved_optimizer())
 
 
 class SparqState(NamedTuple):
     x: jax.Array            # (n, d) local models
     x_hat: jax.Array        # (n, d) public estimates
-    mom: jax.Array          # (n, d) momentum buffers (zeros when momentum == 0)
+    opt: Any                # optimizer state pytree (() for plain SGD,
+                            # (n, d) momentum buffers for SQuARM-SGD)
     t: jax.Array            # () int32 step counter
     bits: jax.Array         # () total bits transmitted (all links); float64
                             # under x64, else Kahan-compensated float32
@@ -101,25 +125,29 @@ class SparqState(NamedTuple):
     triggers: jax.Array     # () int32 number of (node, sync) trigger events
 
 
-def init_state(x0: jax.Array, n: int) -> SparqState:
-    """x0: (d,) shared init or (n, d) per-node init."""
+def init_state(x0: jax.Array, n: int,
+               optimizer: Optional[Optimizer] = None) -> SparqState:
+    """x0: (d,) shared init or (n, d) per-node init. ``optimizer`` must match
+    the one the step was built with (None -> plain SGD, empty opt state)."""
     x = jnp.broadcast_to(x0, (n, x0.shape[-1])) if x0.ndim == 1 else x0
     x = jnp.array(x)  # materialize (broadcast views can't be donated)
     bits0, bits_c0 = bits_mod.acc_init()
-    # x_hat and mom must be distinct buffers: donated states can't alias
-    return SparqState(x=x, x_hat=jnp.zeros_like(x), mom=jnp.zeros_like(x),
+    opt = (optimizer or resolve_optimizer(None)).init(x)
+    # x_hat and opt buffers must be distinct from x: donated states can't alias
+    return SparqState(x=x, x_hat=jnp.zeros_like(x), opt=opt,
                       t=jnp.int32(0),
                       bits=bits0, bits_c=bits_c0, sync_rounds=jnp.int32(0),
                       triggers=jnp.int32(0))
 
 
 def make_step(cfg: SparqConfig, grad_fn: GradFn):
-    """Returns jit-able step(state, key) -> state implementing Algorithm 1."""
+    """Returns jit-able step(state, key) -> state implementing Algorithm 1
+    (or SQuARM-SGD when the config's optimizer carries momentum)."""
     n = cfg.topology.n
     W = jnp.asarray(cfg.topology.w, jnp.float32)
-    deg = jnp.asarray((cfg.topology.w > 0).sum(1) - 1, jnp.float32)  # neighbors
-    gamma = cfg.resolved_gamma()
+    deg = jnp.asarray(cfg.topology.degrees, jnp.float32)  # neighbors
     comp = cfg.compressor
+    opt = cfg.resolved_optimizer()
     H = int(cfg.H)
 
     def payload_bits(d: int) -> float:
@@ -127,16 +155,13 @@ def make_step(cfg: SparqConfig, grad_fn: GradFn):
 
     def step(state: SparqState, key: jax.Array) -> SparqState:
         d = state.x.shape[-1]
+        gamma = cfg.resolved_gamma(d)   # static under jit (d is a shape)
         kg, kc = jax.random.split(key)
         g = grad_fn(state.x, state.t, kg)
         eta = cfg.lr(state.t)
-        if cfg.momentum > 0.0:
-            mom = cfg.momentum * state.mom + g
-            upd = mom
-        else:
-            mom = state.mom
-            upd = g
-        x_half = state.x - eta * upd
+        # local update through the pluggable optimizer seam (optim/sgd.py):
+        # x^{t+1/2} = x^t - eta_t g  for SGD, momentum/Nesterov for SQuARM
+        x_half, opt_new = opt.update(g, state.opt, state.x, eta)
 
         def sync_branch(_):
             c_t = cfg.threshold(state.t)
@@ -162,7 +187,7 @@ def make_step(cfg: SparqConfig, grad_fn: GradFn):
         do_sync = ((state.t + 1) % H) == 0
         x_new, x_hat_new, new_bits, new_bits_c, rounds, trigs = jax.lax.cond(
             do_sync, sync_branch, local_branch, operand=None)
-        return SparqState(x=x_new, x_hat=x_hat_new, mom=mom, t=state.t + 1,
+        return SparqState(x=x_new, x_hat=x_hat_new, opt=opt_new, t=state.t + 1,
                           bits=new_bits, bits_c=new_bits_c,
                           sync_rounds=rounds, triggers=trigs)
 
@@ -181,7 +206,7 @@ def run(cfg: SparqConfig, grad_fn: GradFn, x0: jax.Array, T: int,
     program. Matches `run_loop` step for step (same sequential key
     splitting)."""
     step = make_step(cfg, grad_fn)
-    state = init_state(x0, cfg.topology.n)
+    state = init_state(x0, cfg.topology.n, cfg.resolved_optimizer())
     return engine.run_traced(step, state, T, key, record_every=record_every,
                              eval_fn=eval_fn)
 
@@ -193,7 +218,7 @@ def run_loop(cfg: SparqConfig, grad_fn: GradFn, x0: jax.Array, T: int,
     record point. Kept as the ground-truth driver the chunked-scan engine is
     pinned against (tests/test_engine.py); use `run` everywhere else."""
     step = jax.jit(make_step(cfg, grad_fn))
-    state = init_state(x0, cfg.topology.n)
+    state = init_state(x0, cfg.topology.n, cfg.resolved_optimizer())
     trace = []
     for t in range(T):
         key, sub = jax.random.split(key)
@@ -209,6 +234,24 @@ def run_scan(cfg: SparqConfig, grad_fn: GradFn, x0: jax.Array, T: int,
              key: jax.Array):
     """Scan the whole trajectory with no trace (engine with record_every=0)."""
     step = make_step(cfg, grad_fn)
-    state = init_state(x0, cfg.topology.n)
+    state = init_state(x0, cfg.topology.n, cfg.resolved_optimizer())
     final, _ = engine.run_traced(step, state, T, key)
     return final
+
+
+def squarm_config(topology: Topology, compressor: Compressor, lr: LRSchedule,
+                  *, H: int = 1, threshold: ThresholdSchedule = zero(),
+                  beta: float = 0.9, nesterov: bool = False,
+                  gamma: Optional[float] = None) -> SparqConfig:
+    """SQuARM-SGD (Singh et al., 2020): SPARQ's event-triggered, compressed
+    gossip composed with momentum local steps.
+
+    Identical Algorithm-1 skeleton — only the local update changes, which is
+    exactly what the optimizer seam expresses: heavyball (or Nesterov) SGD via
+    ``optim.momentum`` instead of plain SGD. ``beta=0`` degenerates to the
+    momentum optimizer with a zero buffer and reproduces SPARQ-SGD traces
+    bit-for-bit (tests/test_engine.py); ``threshold=zero(), H>1`` is
+    Qsparse-local-SGD with momentum (Basu et al., 2019)."""
+    return SparqConfig(topology=topology, compressor=compressor,
+                       threshold=threshold, lr=lr, H=H, gamma=gamma,
+                       optimizer=momentum_opt(beta, nesterov=nesterov))

@@ -174,6 +174,15 @@ class Topology:
     def p(self, omega: float) -> float:
         return self.gamma_star(omega) * self.delta / 8.0
 
+    @property
+    def degrees(self) -> np.ndarray:
+        """Neighbor count per node, excluding self regardless of whether the
+        mixing matrix keeps a positive self-weight. This is the one degree
+        definition both engines use for bit accounting: ``(w > 0).sum(1) - 1``
+        silently undercounts on zero-diagonal mixing matrices (e.g. the
+        two-node ring W = [[0, 1], [1, 0]])."""
+        return (self.w > 0).sum(1) - (np.diagonal(self.w) > 0)
+
     def neighbors(self, i: int) -> np.ndarray:
         mask = self.w[i] > 0
         mask[i] = False

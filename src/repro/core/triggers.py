@@ -11,8 +11,9 @@ meaningful). We provide:
 
 * ``constant``  : c_t = c0
 * ``poly``      : c_t = c0 * t^{1-eps}   (Theorem 1 schedule)
-* ``piecewise`` : Section 5.2 schedule — c0, then +step every `every` sync rounds until
-                  `until`, constant afterwards.
+* ``piecewise`` : Section 5.2 schedule — c0, then +step every `every` STEPS (indexed by
+                  the step counter t, not by sync rounds) until `until`, constant
+                  afterwards.
 * ``zero``      : c_t = 0 — always trigger (reduces SPARQ to Qsparse-local-SGD style
                   compressed local SGD; with H=1 it is exactly CHOCO-SGD).
 """

@@ -45,6 +45,7 @@ from repro.core.topology import make_topology
 from repro.core.triggers import ThresholdSchedule, zero
 from repro.kernels.sign_topk import BLOCK, BLOCK_ROWS, sign_topk_blocks
 from repro.models.transformer import init_params, lm_loss
+from repro.optim.sgd import Optimizer, resolve_optimizer
 
 State = Dict[str, Any]
 
@@ -59,17 +60,27 @@ class DistSparqConfig:
     use_kernel: bool = False         # Pallas fused blockwise compression
     threshold: ThresholdSchedule = zero()
     lr: LRSchedule = decaying(0.5, 10.0)
-    momentum: float = 0.0            # Section 5.2 / SQuARM-style momentum
+    momentum: float = 0.0            # shorthand for optimizer=momentum(beta)
+                                     # (Section 5.2 / SQuARM-SGD momentum)
+    nesterov: bool = False           # SQuARM Nesterov variant (with momentum)
+    optimizer: Optional[Optimizer] = None  # local-update rule; None -> sgd()
     gamma: Optional[float] = None    # None -> gamma* from Lemma 6
     microbatches: int = 1            # grad accumulation within a node
     xhat_dtype: str = "float32"      # public-estimate storage dtype
 
-    def resolved_gamma(self, topo) -> float:
+    def resolved_optimizer(self) -> Optimizer:
+        return resolve_optimizer(self.optimizer, self.momentum,
+                                 nesterov=self.nesterov)
+
+    def resolved_gamma(self, topo, d: Optional[int] = None) -> float:
         if self.gamma is not None:
             return float(self.gamma)
-        # TopFrac keeps a `frac` mass of every tensor: use it as the omega
-        # proxy (the conservative per-coordinate bound 1/d over-damps gamma*)
-        return float(topo.gamma_star(max(min(self.frac, 1.0), 1e-3)))
+        # defer to the operator's own omega at the true model dimension
+        # (TopFrac.omega: k/d with k = ceil(frac*d) — frac in the d->inf
+        # limit), exactly what the reference engine's gamma* resolution uses
+        frac = min(self.frac, 1.0)
+        om = TopFrac(frac=frac).omega(d) if d else frac
+        return float(topo.gamma_star(max(om, 1e-3)))
 
 
 def _node_sq_dist(x_half, x_hat):
@@ -127,10 +138,9 @@ def build_sparq(cfg, mesh, dcfg: DistSparqConfig
     topo = make_topology("ring", n)
     W = jnp.asarray(topo.w, jnp.float32)
     w_off = float(topo.w[0, 1]) if n > 2 else 0.0
-    deg = jnp.asarray((topo.w > 0).sum(1) - (topo.w.diagonal() > 0),
-                      jnp.float32)
-    gamma = dcfg.resolved_gamma(topo)
+    deg = jnp.asarray(topo.degrees, jnp.float32)
     comp = TopFrac(frac=dcfg.frac)
+    opt = dcfg.resolved_optimizer()
     H = int(dcfg.H)
     mbs = int(dcfg.microbatches)
     xhat_dt = jnp.dtype(dcfg.xhat_dtype)
@@ -142,6 +152,9 @@ def build_sparq(cfg, mesh, dcfg: DistSparqConfig
 
     pshape = jax.eval_shape(lambda k: init_params(cfg, k),
                             jax.random.PRNGKey(0))
+    d_model_total = sum(math.prod(leaf.shape) or 1
+                        for leaf in jax.tree.leaves(pshape))
+    gamma = dcfg.resolved_gamma(topo, d_model_total)
     if dcfg.use_kernel:
         # the Pallas path is a BLOCKWISE operator: k_b entries (plus ties) and
         # one scale per 1024-element block — charge what it actually sends
@@ -153,8 +166,25 @@ def build_sparq(cfg, mesh, dcfg: DistSparqConfig
         payload = tree_payload_bits(comp, pshape)
     pspec = sh.param_specs(pshape, mesh, node_dim=True)
     scalar = jax.sharding.PartitionSpec()
+    # optimizer-state specs: optimizer buffers mirror parameter subtrees with
+    # their tree paths intact (momentum: the whole treedef; AdamState: mu/nu),
+    # so run the SAME path-aware spec rule over the opt-state shapes — a leaf
+    # that is a node-stacked buffer gets its param-rule spec, anything else
+    # (step counts, ()-shaped leaves) replicates
+    stacked = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((n,) + l.shape, l.dtype), pshape)
+    opt_shape_u = jax.eval_shape(opt.init, pshape)      # un-stacked buffers
+    opt_unstacked, opt_treedef = jax.tree.flatten(opt_shape_u)
+    opt_stacked = jax.tree.leaves(jax.eval_shape(opt.init, stacked))
+    opt_base = jax.tree.leaves(
+        sh.param_specs(opt_shape_u, mesh),
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    opt_specs = opt_treedef.unflatten([
+        jax.sharding.PartitionSpec("node", *base)
+        if stk.shape == (n,) + uns.shape else scalar
+        for uns, stk, base in zip(opt_unstacked, opt_stacked, opt_base)])
     state_specs: State = {
-        "params": pspec, "x_hat": pspec, "mom": pspec,
+        "params": pspec, "x_hat": pspec, "opt": opt_specs,
         "t": scalar, "bits": scalar, "bits_c": scalar,
         "sync_rounds": scalar, "triggers": scalar,
     }
@@ -167,7 +197,7 @@ def build_sparq(cfg, mesh, dcfg: DistSparqConfig
         return {
             "params": params,
             "x_hat": jax.tree.map(lambda x: jnp.zeros(x.shape, xhat_dt), params),
-            "mom": jax.tree.map(jnp.zeros_like, params),
+            "opt": opt.init(params),
             "t": jnp.int32(0), "bits": bits0, "bits_c": bits_c0,
             "sync_rounds": jnp.int32(0), "triggers": jnp.int32(0),
         }
@@ -215,14 +245,9 @@ def build_sparq(cfg, mesh, dcfg: DistSparqConfig
         losses, grads = node_losses_grads(state["params"], batch)
         loss = jnp.mean(losses)
         eta = dcfg.lr(state["t"]).astype(jnp.float32)
-        if dcfg.momentum > 0.0:
-            mom = jax.tree.map(lambda m, g: dcfg.momentum * m + g,
-                               state["mom"], grads)
-            upd = mom
-        else:
-            mom, upd = state["mom"], grads
-        x_half = jax.tree.map(lambda p, u: p - eta * u.astype(p.dtype),
-                              state["params"], upd)
+        # local update through the shared optimizer seam (optim/sgd.py):
+        # plain SGD by default, heavyball/Nesterov for SQuARM-SGD
+        x_half, opt_new = opt.update(grads, state["opt"], state["params"], eta)
 
         def sync_branch(op):
             xh, xe = op
@@ -262,7 +287,7 @@ def build_sparq(cfg, mesh, dcfg: DistSparqConfig
         do_sync = ((state["t"] + 1) % H) == 0
         x_new, xe_new, bits, bits_c, rounds, trigs = jax.lax.cond(
             do_sync, sync_branch, local_branch, (x_half, state["x_hat"]))
-        new_state = {"params": x_new, "x_hat": xe_new, "mom": mom,
+        new_state = {"params": x_new, "x_hat": xe_new, "opt": opt_new,
                      "t": state["t"] + 1, "bits": bits, "bits_c": bits_c,
                      "sync_rounds": rounds, "triggers": trigs}
         metrics = {"loss": loss, "eta": eta,

@@ -27,7 +27,10 @@ def _parse():
     ap.add_argument("--H", type=int, default=5)
     ap.add_argument("--frac", type=float, default=0.1)
     ap.add_argument("--variant", default="ring", choices=["dense", "ring"])
-    ap.add_argument("--momentum", type=float, default=0.0)
+    ap.add_argument("--momentum", type=float, default=0.0,
+                    help="SQuARM-SGD momentum beta (0 = plain SPARQ)")
+    ap.add_argument("--nesterov", action="store_true",
+                    help="Nesterov variant of the SQuARM momentum update")
     ap.add_argument("--lr", type=float, default=0.5)
     ap.add_argument("--threshold", type=float, default=2.0)
     ap.add_argument("--use-kernel", action="store_true",
@@ -86,7 +89,8 @@ def main():
     dcfg = DistSparqConfig(
         H=args.H, frac=args.frac, lr=decaying(args.lr, 100.0),
         threshold=constant(args.threshold), momentum=args.momentum,
-        variant=args.variant, use_kernel=args.use_kernel)
+        nesterov=args.nesterov, variant=args.variant,
+        use_kernel=args.use_kernel)
     init_fn, train_step, state_specs, _ = build_sparq(cfg, mesh, dcfg)
     state = init_fn(jax.random.PRNGKey(0))
     ssh = jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs,

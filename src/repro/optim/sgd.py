@@ -94,3 +94,29 @@ def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
 
 def make_optimizer(name: str, **kw) -> Optimizer:
     return {"sgd": sgd, "momentum": momentum, "adamw": adamw}[name](**kw)
+
+
+def resolve_optimizer(optimizer, beta: float = 0.0,
+                      nesterov: bool = False) -> Optimizer:
+    """The single resolution rule behind every engine's local-update seam.
+
+    ``optimizer`` wins when given; otherwise the scalar ``beta`` shorthand
+    (SparqConfig.momentum / DistSparqConfig.momentum / the baselines'
+    ``momentum=`` kwarg) maps to heavyball SGD, and 0 maps to plain
+    :func:`sgd`. Passing both is ambiguous and rejected.
+    """
+    if optimizer is not None:
+        if beta:
+            raise ValueError(
+                "pass either optimizer= or the momentum shorthand, not both")
+        if nesterov:
+            raise ValueError(
+                "nesterov belongs to the momentum shorthand; configure it on "
+                "the explicit optimizer instead (optim.momentum(nesterov=True))")
+        return optimizer
+    if beta:
+        return momentum(beta, nesterov=nesterov)
+    if nesterov:
+        raise ValueError("nesterov=True needs a nonzero momentum beta "
+                         "(plain SGD has no velocity to look ahead on)")
+    return sgd()

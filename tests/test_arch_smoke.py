@@ -1,8 +1,11 @@
 """Per-architecture smoke tests (deliverable f): REDUCED variant of each family
 (<=2 layers, d_model<=512, <=4 experts) runs one forward + one train step on CPU;
-output shapes and no-NaN asserted. Full configs are exercised by the dry-run only."""
-import dataclasses
+output shapes and no-NaN asserted. Full configs are exercised by the dry-run only.
 
+The quick (default) tier keeps one architecture per family — every assertion
+still runs against every family on every default `pytest` invocation; the
+within-family duplicates are compile-dominated and carry the `slow` marker
+(CI's `-m slow` job still exercises all ten)."""
 import jax
 import jax.numpy as jnp
 import pytest
@@ -15,6 +18,20 @@ from repro.optim.sgd import sgd
 
 B, S = 2, 64
 
+# one representative per family stays in the quick tier; the rest (dense and
+# moe duplicates — the most compile-expensive configs) run under `-m slow`
+QUICK_ARCHS = {"qwen1.5-0.5b", "mamba2-370m", "musicgen-large",
+               "chameleon-34b", "deepseek-moe-16b", "zamba2-7b"}
+ARCH_PARAMS = [a if a in QUICK_ARCHS else
+               pytest.param(a, marks=pytest.mark.slow) for a in ARCH_IDS]
+
+
+def _reduced(arch_id):
+    """Smoke-sized config: smaller d_model/vocab than reduced() defaults keep
+    the per-arch XLA compiles (the dominant cost on CPU) inside the tier-1
+    wall-time budget without weakening any assertion."""
+    return get_config(arch_id).reduced(d_model=128, vocab=256)
+
 
 def _batch(cfg, key):
     toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
@@ -25,14 +42,9 @@ def _batch(cfg, key):
     return batch
 
 
-@pytest.fixture(scope="module")
-def reduced(request):
-    return None
-
-
-@pytest.mark.parametrize("arch_id", ARCH_IDS)
+@pytest.mark.parametrize("arch_id", ARCH_PARAMS)
 def test_smoke_forward_shapes(arch_id):
-    cfg = get_config(arch_id).reduced()
+    cfg = _reduced(arch_id)
     assert cfg.n_layers <= 2 and cfg.d_model <= 512
     assert cfg.n_experts <= 4
     key = jax.random.PRNGKey(0)
@@ -44,9 +56,9 @@ def test_smoke_forward_shapes(arch_id):
     assert not bool(jnp.isnan(logits).any())
 
 
-@pytest.mark.parametrize("arch_id", ARCH_IDS)
+@pytest.mark.parametrize("arch_id", ARCH_PARAMS)
 def test_smoke_train_step(arch_id):
-    cfg = get_config(arch_id).reduced()
+    cfg = _reduced(arch_id)
     key = jax.random.PRNGKey(1)
     params = init_params(cfg, key)
     batch = _batch(cfg, key)
@@ -71,9 +83,9 @@ def test_smoke_train_step(arch_id):
     assert float(loss2) < float(loss)
 
 
-@pytest.mark.parametrize("arch_id", ARCH_IDS)
+@pytest.mark.parametrize("arch_id", ARCH_PARAMS)
 def test_smoke_decode_step(arch_id):
-    cfg = get_config(arch_id).reduced()
+    cfg = _reduced(arch_id)
     key = jax.random.PRNGKey(2)
     params = init_params(cfg, key)
     cache = init_cache(cfg, B, 16)

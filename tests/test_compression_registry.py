@@ -30,6 +30,27 @@ def test_registry_rejects_unknown():
         make_compressor("nope")
 
 
+def test_topfrac_rejects_fixed_k():
+    """Regression: TopFrac inherited SignTopK.k and silently ignored it —
+    make_compressor("signtop_frac", k=32) built a compressor that sent
+    ceil(frac*d) values no matter what k said. It must refuse instead."""
+    with pytest.raises(ValueError, match="frac"):
+        make_compressor("signtop_frac", k=32)
+    with pytest.raises(ValueError, match="frac"):
+        TopFrac(k=4, frac=0.5)
+
+
+def test_topfrac_frac_round_trips():
+    c = make_compressor("signtop_frac", frac=0.25)
+    assert isinstance(c, TopFrac) and c.frac == 0.25
+    assert c._k(16) == 4
+    x = jnp.linspace(1.0, 2.0, 16)
+    assert int(jnp.sum(c(x) != 0)) == 4
+    for bad in (0.0, -0.1, 1.5):
+        with pytest.raises(ValueError, match="0 < frac <= 1"):
+            make_compressor("signtop_frac", frac=bad)
+
+
 @pytest.mark.parametrize("frac", [0.01, 0.1, 0.5, 1.0])
 @pytest.mark.parametrize("d", [1, 2, 5, 1000])
 def test_topfrac_k_and_bits_consistent(d, frac):
@@ -38,6 +59,8 @@ def test_topfrac_k_and_bits_consistent(d, frac):
     assert k == max(1, math.ceil(frac * d))
     assert 1 <= k <= d
     assert c.bits(d) == bits_mod.signtopk_bits(d, k)
+    # omega is the k/d gamma* proxy at the true dimension, not SignTopK's 1/d
+    assert c.omega(d) == pytest.approx(k / d)
     # support size == k on distinct-magnitude inputs
     x = jnp.linspace(1.0, 2.0, d)
     assert int(jnp.sum(c(x) != 0)) == k

@@ -59,14 +59,20 @@ class _TreeCompressor:
         return self.comp.omega(d)
 
 
-@pytest.mark.parametrize("threshold,H", [(zero(), 2), (constant(1e12), 3)],
-                         ids=["always-trigger", "never-trigger"])
-def test_dist_engine_matches_reference(threshold, H):
+@pytest.mark.parametrize("threshold,H,beta",
+                         [(zero(), 2, 0.0), (constant(1e12), 3, 0.0),
+                          (zero(), 2, 0.9)],
+                         ids=["always-trigger", "never-trigger",
+                              "momentum-0.9"])
+def test_dist_engine_matches_reference(threshold, H, beta):
+    """beta > 0 pins the SQuARM momentum runtime: both engines resolve the
+    same optim.momentum update through the shared optimizer seam."""
     cfg, mesh, batch = _setup()
     frac, gamma, lr = 0.25, 0.3, fixed(0.05)
 
     dcfg = DistSparqConfig(H=H, variant="dense", frac=frac,
-                           threshold=threshold, lr=lr, gamma=gamma)
+                           threshold=threshold, lr=lr, gamma=gamma,
+                           momentum=beta)
     init_fn, train_step, _, pshape = build_sparq(cfg, mesh, dcfg)
     state = init_fn(jax.random.PRNGKey(0))
     step = jax.jit(train_step)
@@ -86,9 +92,10 @@ def test_dist_engine_matches_reference(threshold, H):
         return jax.vmap(g1)(x_nd, batch["tokens"], batch["labels"])
 
     rcfg = SparqConfig(topology=make_topology("ring", N), compressor=comp,
-                       threshold=threshold, lr=lr, H=H, gamma=gamma)
+                       threshold=threshold, lr=lr, H=H, gamma=gamma,
+                       momentum=beta)
     rstep = jax.jit(make_step(rcfg, grad_fn))
-    rstate = init_state(x0, N)
+    rstate = init_state(x0, N, rcfg.resolved_optimizer())
     for t in range(T):
         rstate = rstep(rstate, jax.random.PRNGKey(t))
 

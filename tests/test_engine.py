@@ -10,7 +10,7 @@ from repro.core import baselines, engine
 from repro.core.compression import SignTopK
 from repro.core.schedule import decaying
 from repro.core.sparq import (SparqConfig, init_state, make_step, run,
-                              run_loop)
+                              run_loop, squarm_config)
 from repro.core.topology import make_topology
 from repro.core.triggers import constant
 from repro.data.synthetic import convex_dataset, logistic_loss_and_grad
@@ -62,6 +62,59 @@ def test_run_traced_matches_loop_sparq(problem):
     assert float(st_e.bits) == pytest.approx(float(st_l.bits), rel=1e-6)
     assert int(st_e.sync_rounds) == int(st_l.sync_rounds)
     assert int(st_e.triggers) == int(st_l.triggers)
+
+
+def test_squarm_momentum_zero_is_sparq(problem):
+    """SQuARM-SGD's equivalence pin: with beta=0 the momentum optimizer's
+    local update degenerates to plain SGD, so the SQuARM runtime must
+    reproduce today's SPARQ trajectory exactly (same trace, same final
+    ensemble, same bit totals) — zero-threshold/zero-momentum reductions are
+    the Qsparse-local-SGD special case both algorithms share."""
+    grad_fn, eval_fn = problem
+    topo = make_topology("ring", N)
+    lr = decaying(1.0, 50.0)
+    sparq = SparqConfig(topology=topo, compressor=SignTopK(k=6),
+                        threshold=constant(50.0), lr=lr, H=5, gamma=0.3)
+    squarm0 = squarm_config(topo, SignTopK(k=6), lr, H=5,
+                            threshold=constant(50.0), beta=0.0, gamma=0.3)
+    key = jax.random.PRNGKey(0)
+    st_p, tr_p = run(sparq, grad_fn, jnp.zeros(D), T, key,
+                     record_every=REC, eval_fn=eval_fn)
+    st_q, tr_q = run(squarm0, grad_fn, jnp.zeros(D), T, key,
+                     record_every=REC, eval_fn=eval_fn)
+    assert_traces_equal(tr_q, tr_p)
+    np.testing.assert_array_equal(np.array(st_q.x), np.array(st_p.x))
+    np.testing.assert_array_equal(np.array(st_q.x_hat), np.array(st_p.x_hat))
+    assert float(st_q.bits) == float(st_p.bits)
+    assert int(st_q.triggers) == int(st_p.triggers)
+    # the SQuARM state really does carry a momentum buffer through the
+    # donated chunked scan (at beta=0 it holds the last gradient, m = 0*m + g,
+    # and never feeds back into the iterates), unlike SPARQ's empty opt state
+    (buf,) = jax.tree.leaves(st_q.opt)
+    assert buf.shape == st_q.x.shape
+    assert jax.tree.leaves(st_p.opt) == []
+
+
+def test_run_traced_matches_loop_squarm(problem):
+    """Momentum buffers ride through the donated chunked-scan engine
+    unchanged: engine trace == legacy per-step loop trace with beta=0.9."""
+    grad_fn, eval_fn = problem
+    topo = make_topology("ring", N)
+    cfg = squarm_config(topo, SignTopK(k=6), decaying(1.0, 50.0), H=5,
+                        threshold=constant(50.0), beta=0.9, nesterov=True,
+                        gamma=0.3)
+    key = jax.random.PRNGKey(3)
+    st_e, tr_e = run(cfg, grad_fn, jnp.zeros(D), T, key,
+                     record_every=REC, eval_fn=eval_fn)
+    st_l, tr_l = run_loop(cfg, grad_fn, jnp.zeros(D), T, key,
+                          record_every=REC, eval_fn=eval_fn)
+    assert_traces_equal(tr_e, tr_l)
+    np.testing.assert_allclose(np.array(st_e.x), np.array(st_l.x),
+                               rtol=1e-5, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(st_e.opt), jax.tree.leaves(st_l.opt)):
+        np.testing.assert_allclose(np.array(a), np.array(b),
+                                   rtol=1e-5, atol=1e-6)
+    assert float(st_e.bits) == pytest.approx(float(st_l.bits), rel=1e-6)
 
 
 def test_run_traced_matches_loop_vanilla(problem):

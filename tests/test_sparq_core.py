@@ -117,6 +117,37 @@ def test_centralized_baseline_converges():
     assert float(jnp.linalg.norm(st.x - opt)) < 0.05
 
 
+def test_gamma_star_resolves_at_true_dimension():
+    """Regression: resolved_gamma used a hard-coded d=4096 for omega, so
+    TopK(k=10) on a d=20 convex problem got omega 10/4096 instead of 0.5 —
+    a ~200x under-damped Lemma-6 gamma*."""
+    topo = make_topology("ring", N)
+    cfg = SparqConfig(topology=topo, compressor=TopK(k=10))
+    assert cfg.resolved_gamma(20) == pytest.approx(topo.gamma_star(0.5))
+    assert cfg.resolved_gamma(100) == pytest.approx(topo.gamma_star(0.1))
+    # the old hard-coded 4096 was off by two orders of magnitude at d=20
+    assert cfg.resolved_gamma(20) / topo.gamma_star(10 / 4096) > 100
+    # explicit gamma bypasses resolution entirely
+    assert SparqConfig(topology=topo, gamma=0.25).resolved_gamma() == 0.25
+    with pytest.raises(ValueError, match="model dimension"):
+        cfg.resolved_gamma()
+
+
+def test_gamma_star_threaded_through_run():
+    """run() must resolve gamma* from the ACTUAL ensemble dimension: running
+    with gamma=None equals running with gamma pinned to gamma*(omega(d))."""
+    grad_fn, _ = quad_problem(noise=0.0)
+    topo = make_topology("ring", N)
+    lr = decaying(1.0, 50.0)
+    auto = SparqConfig(topology=topo, compressor=TopK(k=8), threshold=zero(),
+                       lr=lr, H=2)
+    pinned = SparqConfig(topology=topo, compressor=TopK(k=8), threshold=zero(),
+                         lr=lr, H=2, gamma=auto.resolved_gamma(D))
+    s_a = run_scan(auto, grad_fn, jnp.zeros(D), 30, jax.random.PRNGKey(0))
+    s_p = run_scan(pinned, grad_fn, jnp.zeros(D), 30, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.array(s_a.x), np.array(s_p.x))
+
+
 def test_momentum_variant_runs():
     grad_fn, opt = quad_problem()
     topo = make_topology("ring", N)

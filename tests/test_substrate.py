@@ -11,7 +11,8 @@ from repro.core import schedule as sched
 from repro.core import triggers
 from repro.data.synthetic import (TokenPipeline, convex_dataset,
                                   logistic_loss_and_grad)
-from repro.optim.sgd import adamw, make_optimizer, momentum, sgd
+from repro.optim.sgd import (adamw, make_optimizer, momentum,
+                             resolve_optimizer, sgd)
 
 
 # ---------------------------------------------------------------- optimizers
@@ -35,6 +36,25 @@ def test_make_optimizer_names():
     assert make_optimizer("sgd").name == "sgd"
     assert make_optimizer("momentum", beta=0.8).name == "momentum(0.8)"
     assert make_optimizer("adamw").name == "adamw"
+
+
+def test_resolve_optimizer_seam():
+    """The one resolution rule every engine shares (core/sparq, baselines,
+    dist): explicit optimizer wins, beta shorthand maps to heavyball, the
+    ambiguous combination is rejected."""
+    assert resolve_optimizer(None).name == "sgd"
+    assert resolve_optimizer(None, 0.9).name == "momentum(0.9)"
+    opt = adamw()
+    assert resolve_optimizer(opt) is opt
+    with pytest.raises(ValueError, match="not both"):
+        resolve_optimizer(sgd(), 0.9)
+    # beta=0 shorthand is plain SGD, not a degenerate momentum optimizer
+    assert resolve_optimizer(None, 0.0).name == "sgd"
+    # a dangling nesterov flag must fail loudly, never silently become SGD
+    with pytest.raises(ValueError, match="nesterov"):
+        resolve_optimizer(None, 0.0, nesterov=True)
+    with pytest.raises(ValueError, match="nesterov"):
+        resolve_optimizer(sgd(), nesterov=True)
 
 
 # ---------------------------------------------------------------- schedules

@@ -56,6 +56,24 @@ def test_neighbors():
     assert set(t.neighbors(0)) == {1, 5}
 
 
+def test_degrees_excludes_self_for_any_diagonal():
+    """Topology.degrees is the one neighbor-degree definition both engines
+    share for bit accounting. It must not assume a positive self-weight:
+    `(w > 0).sum(1) - 1` undercounts on zero-diagonal mixing matrices."""
+    r = make_topology("ring", 6)           # positive diagonal (uniform 1/3)
+    assert (np.diagonal(r.w) > 0).all()
+    np.testing.assert_array_equal(r.degrees, np.full(6, 2))
+    # zero-self-weight mixing on a triangle: W = (J - I)/2 is symmetric,
+    # doubly stochastic, connected (delta = 0.5), with an all-zero diagonal
+    z = Topology(w=(np.ones((3, 3)) - np.eye(3)) / 2.0, name="zero-diag")
+    z.validate()
+    np.testing.assert_array_equal(z.degrees, np.full(3, 2))
+    assert ((z.w > 0).sum(1) - 1 == 1).all()   # the old formula undercounts
+    # complete graph with uniform mixing keeps a diagonal -> unchanged
+    c = make_topology("complete", 5)
+    np.testing.assert_array_equal(c.degrees, np.full(5, 4))
+
+
 def test_odd_degree_expander():
     """Regression: odd deg used to burn all 200 resamples (the deg%2 check sat
     inside the retry loop) and raise a misleading 'failed to sample' error.
