@@ -1,9 +1,15 @@
-"""Footnote-5 study: expander graphs vs ring vs torus at equal node count.
+"""Footnote-5 study: expander graphs vs ring vs torus at equal node count,
+plus time-varying gossip plans.
 
 The paper suggests expanders "simultaneously give low communication and faster
-convergence (constant degree, large spectral gap)". We measure: spectral gap
-delta, gamma*, consensus error after T steps, bits, and final loss for
-SPARQ-SGD on each topology."""
+convergence (constant degree, large spectral gap)"; its theory only needs each
+round's W symmetric doubly stochastic, so the dynamic rows exercise
+per-sync-round graphs (random matchings, edge-sampled expander subgraphs, a
+round-robin expander cycle — cf. EventGraD's event-triggered communication
+over dynamic topologies). We measure: spectral gap delta (delta_eff of the
+round average for dynamic plans), gamma* (worst case over the plan support),
+consensus error after T steps, bits (charged at the ACTIVE round's per-node
+degrees deg_r), and final loss for SPARQ-SGD on each plan."""
 from __future__ import annotations
 
 from typing import Dict, List
@@ -15,7 +21,7 @@ from repro.core import engine
 from repro.core.compression import SignTopK
 from repro.core.schedule import decaying
 from repro.core.sparq import SparqConfig, make_step
-from repro.core.topology import make_topology
+from repro.core.topology import GossipPlan, make_plan
 from repro.core.triggers import zero
 from repro.data.synthetic import convex_dataset, logistic_loss_and_grad
 
@@ -35,13 +41,27 @@ def run_bench(quick: bool = True) -> List[Dict]:
     def eval_fn(xbar):
         return full_loss(xbar, Xj, Yj)
 
+    # static topologies (SparqConfig topology= shorthand) and time-varying
+    # plans (SparqConfig plan=) through the same pluggable GossipPlan layer
+    static = [(kind, make_plan(kind.split("_")[0], n, **kw))
+              for kind, kw in (("ring", {}), ("torus2d", {}),
+                               ("expander", {"deg": 4, "seed": 1}),
+                               ("expander_deg3", {"deg": 3, "seed": 1}),
+                               ("complete", {}))]
+    dynamic = [
+        # fresh random perfect matching every sync round (1-regular rounds)
+        ("dyn_matchings", GossipPlan.matchings(n, rounds=8, seed=1)),
+        # per-round edge-sampled subgraphs of the deg-4 expander
+        ("dyn_edges_expander",
+         make_plan("expander", n, deg=4, seed=1, dynamic="edges",
+                   rounds=8, edge_frac=0.5)),
+        # round-robin over 4 independently sampled deg-4 expanders
+        ("dyn_cycle_expanders",
+         make_plan("expander", n, deg=4, seed=1, dynamic="cycle", rounds=4)),
+    ]
     rows = []
-    for kind, kw in (("ring", {}), ("torus2d", {}),
-                     ("expander", {"deg": 4, "seed": 1}),
-                     ("expander_deg3", {"deg": 3, "seed": 1}),
-                     ("complete", {})):
-        topo = make_topology(kind.split("_")[0], n, **kw)
-        cfg = SparqConfig(topology=topo, compressor=SignTopK(k=10),
+    for kind, plan in static + dynamic:
+        cfg = SparqConfig(plan=plan, compressor=SignTopK(k=10),
                           threshold=zero(), lr=lr, H=5)
         runner = engine.make_runner(make_step(cfg, grad_fn), T,
                                     record_every=rec, eval_fn=eval_fn)
@@ -51,8 +71,10 @@ def run_bench(quick: bool = True) -> List[Dict]:
         consensus = float(jnp.linalg.norm(st.x - xbar[None]))
         rows.append({
             "name": f"topology_{kind}", "us_per_call": round(us, 1),
-            "delta": round(topo.delta, 4),
-            "gamma_star": round(topo.gamma_star(10 / (f * c)), 5),
+            # delta_eff == delta of the single matrix for static plans
+            "delta": round(plan.delta_eff, 4),
+            "gamma_star": round(plan.gamma_star(10 / (f * c)), 5),
+            "plan_rounds": plan.R,
             # step-T iterate, consistent with consensus_err/bits (the last
             # trace record sits at (T//rec)*rec < T when rec doesn't divide T)
             "final_loss": round(float(eval_fn(xbar)), 4),

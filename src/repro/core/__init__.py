@@ -7,7 +7,8 @@ from repro.core.schedule import (LRSchedule, decaying, fixed, is_sync,
 from repro.core.engine import Trace, make_runner, run_traced, timed_run
 from repro.core.sparq import (SparqConfig, SparqState, init_state, make_step,
                               run, run_loop, run_scan, squarm_config)
-from repro.core.topology import Topology, make_topology
+from repro.core.topology import (GossipPlan, Topology, make_plan,
+                                 make_topology)
 from repro.core.triggers import (ThresholdSchedule, constant, make_schedule,
                                  piecewise, poly, should_trigger, zero)
 
@@ -18,6 +19,7 @@ __all__ = [
     "SparqState", "init_state", "make_step", "run", "run_loop", "run_scan",
     "squarm_config",
     "Trace", "make_runner", "run_traced", "timed_run", "Topology",
+    "GossipPlan", "make_plan",
     "make_topology", "ThresholdSchedule", "constant", "make_schedule",
     "piecewise", "poly", "should_trigger", "zero",
 ]

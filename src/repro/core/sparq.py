@@ -36,7 +36,7 @@ from repro.core import bits as bits_mod
 from repro.core import engine
 from repro.core.compression import Compressor, Identity
 from repro.core.schedule import LRSchedule, fixed
-from repro.core.topology import Topology
+from repro.core.topology import GossipPlan, Topology
 from repro.core.triggers import ThresholdSchedule, zero
 from repro.optim.sgd import Optimizer, momentum as momentum_opt, resolve_optimizer
 
@@ -74,7 +74,8 @@ def sync_message_bits(trig: jax.Array, deg: jax.Array,
 
 @dataclasses.dataclass(frozen=True)
 class SparqConfig:
-    topology: Topology
+    topology: Optional[Topology] = None    # static graph (shorthand for a
+                                           # one-round GossipPlan)
     compressor: Compressor = Identity()
     threshold: ThresholdSchedule = zero()
     lr: LRSchedule = fixed(0.1)
@@ -83,6 +84,25 @@ class SparqConfig:
     momentum: float = 0.0           # shorthand for optimizer=momentum(beta);
                                     # Section 5.2 uses 0.9 (theory uses 0)
     optimizer: Optional[Optimizer] = None  # local-update rule; None -> sgd()
+    plan: Optional[GossipPlan] = None      # time-varying gossip plan; wins
+                                           # over (and excludes) topology=
+
+    def resolved_plan(self) -> GossipPlan:
+        """The communication plan this config runs: ``plan=`` verbatim, or
+        the static single-round plan of ``topology=``."""
+        if self.plan is not None:
+            if self.topology is not None:
+                raise ValueError(
+                    "pass either topology= or plan=, not both (a static "
+                    "topology IS the one-round plan GossipPlan.from_topology)")
+            return self.plan
+        if self.topology is None:
+            raise ValueError("SparqConfig needs topology= or plan=")
+        return GossipPlan.from_topology(self.topology)
+
+    @property
+    def n(self) -> int:
+        return self.resolved_plan().n
 
     def resolved_optimizer(self) -> Optimizer:
         return resolve_optimizer(self.optimizer, self.momentum)
@@ -90,14 +110,16 @@ class SparqConfig:
     def resolved_gamma(self, d: Optional[int] = None) -> float:
         """Consensus stepsize; Lemma-6 gamma* needs the true model dimension
         ``d`` because the compressor contraction omega is dimension-dependent
-        (TopK(k) at d=20 has omega 0.5, not k/4096)."""
+        (TopK(k) at d=20 has omega 0.5, not k/4096). For a time-varying plan
+        this is the worst case over the plan's support
+        (GossipPlan.gamma_star)."""
         if self.gamma is not None:
             return float(self.gamma)
         if not d:
             raise ValueError(
                 "resolved_gamma() needs the model dimension d when gamma is "
                 "None: Lemma-6 gamma* depends on the compressor's omega(d)")
-        return self.topology.gamma_star(self._omega(d))
+        return self.resolved_plan().gamma_star(self._omega(d))
 
     def _omega(self, d: int) -> float:
         # Sign-type ops report the worst case 1/d -> guard with a floor so
@@ -109,7 +131,7 @@ class SparqConfig:
         """State matching THIS config's optimizer — the safe way to build
         fresh states for a step from ``make_step(cfg, ...)`` (a bare
         ``init_state(x0, n)`` only fits momentum-free configs)."""
-        return init_state(x0, self.topology.n, self.resolved_optimizer())
+        return init_state(x0, self.n, self.resolved_optimizer())
 
 
 class SparqState(NamedTuple):
@@ -142,10 +164,17 @@ def init_state(x0: jax.Array, n: int,
 
 def make_step(cfg: SparqConfig, grad_fn: GradFn):
     """Returns jit-able step(state, key) -> state implementing Algorithm 1
-    (or SQuARM-SGD when the config's optimizer carries momentum)."""
-    n = cfg.topology.n
-    W = jnp.asarray(cfg.topology.w, jnp.float32)
-    deg = jnp.asarray(cfg.topology.degrees, jnp.float32)  # neighbors
+    (or SQuARM-SGD when the config's optimizer carries momentum).
+
+    Time-varying gossip: the whole plan support rides along as one stacked
+    ``(R, n, n)`` device constant and the sync branch looks the active
+    ``W_r`` (and its per-round degrees, for the bit accounting) up by
+    ``sync_rounds % R`` — the trajectory stays a single XLA program."""
+    plan = cfg.resolved_plan()
+    n = plan.n
+    R = plan.R
+    Ws = jnp.asarray(plan.ws, jnp.float32)          # (R, n, n)
+    degs = jnp.asarray(plan.degrees, jnp.float32)   # (R, n) neighbors
     comp = cfg.compressor
     opt = cfg.resolved_optimizer()
     H = int(cfg.H)
@@ -164,6 +193,13 @@ def make_step(cfg: SparqConfig, grad_fn: GradFn):
         x_half, opt_new = opt.update(g, state.opt, state.x, eta)
 
         def sync_branch(_):
+            # active round's graph: static plans (R == 1) bind W_0 directly
+            # so the lowered program is unchanged from the fixed-W days
+            if R == 1:
+                W_r, deg_r = Ws[0], degs[0]
+            else:
+                r = jax.lax.rem(state.sync_rounds, jnp.int32(R))
+                W_r, deg_r = Ws[r], degs[r]
             c_t = cfg.threshold(state.t)
             diff = x_half - state.x_hat                       # (n, d)
             sq = jnp.sum(diff * diff, axis=-1)                # (n,)
@@ -172,10 +208,10 @@ def make_step(cfg: SparqConfig, grad_fn: GradFn):
             q = jax.vmap(lambda v, k: comp(v, k))(diff, keys)
             q = q * trig[:, None].astype(q.dtype)             # line 11: send 0
             x_hat_new = state.x_hat + q                       # line 13
-            x_new = x_half + gamma * gossip_mix(W, x_hat_new)  # line 15
+            x_new = x_half + gamma * gossip_mix(W_r, x_hat_new)  # line 15
             new_bits, new_bits_c = bits_mod.acc_add(
                 state.bits, state.bits_c,
-                sync_message_bits(trig, deg, payload_bits(d)))
+                sync_message_bits(trig, deg_r, payload_bits(d)))
             return (x_new, x_hat_new, new_bits, new_bits_c,
                     state.sync_rounds + 1,
                     state.triggers + jnp.sum(trig).astype(jnp.int32))
@@ -206,7 +242,7 @@ def run(cfg: SparqConfig, grad_fn: GradFn, x0: jax.Array, T: int,
     program. Matches `run_loop` step for step (same sequential key
     splitting)."""
     step = make_step(cfg, grad_fn)
-    state = init_state(x0, cfg.topology.n, cfg.resolved_optimizer())
+    state = init_state(x0, cfg.n, cfg.resolved_optimizer())
     return engine.run_traced(step, state, T, key, record_every=record_every,
                              eval_fn=eval_fn)
 
@@ -218,7 +254,7 @@ def run_loop(cfg: SparqConfig, grad_fn: GradFn, x0: jax.Array, T: int,
     record point. Kept as the ground-truth driver the chunked-scan engine is
     pinned against (tests/test_engine.py); use `run` everywhere else."""
     step = jax.jit(make_step(cfg, grad_fn))
-    state = init_state(x0, cfg.topology.n, cfg.resolved_optimizer())
+    state = init_state(x0, cfg.n, cfg.resolved_optimizer())
     trace = []
     for t in range(T):
         key, sub = jax.random.split(key)
@@ -234,7 +270,7 @@ def run_scan(cfg: SparqConfig, grad_fn: GradFn, x0: jax.Array, T: int,
              key: jax.Array):
     """Scan the whole trajectory with no trace (engine with record_every=0)."""
     step = make_step(cfg, grad_fn)
-    state = init_state(x0, cfg.topology.n, cfg.resolved_optimizer())
+    state = init_state(x0, cfg.n, cfg.resolved_optimizer())
     final, _ = engine.run_traced(step, state, T, key)
     return final
 

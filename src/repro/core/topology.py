@@ -11,13 +11,21 @@ stepsize gamma* (Lemma 6):
 
 Graphs provided: ring (paper Section 5), 2-D torus, complete, and Ramanujan-ish random
 regular expanders (paper Footnote 5 recommends expanders). Mixing weights: uniform
-neighbor weights (1/(deg+1), used by the paper's ring experiments) or
-Metropolis-Hastings (safe for irregular graphs).
+neighbor weights (1/(deg_max+1); on regular graphs this is the paper's ring choice
+1/(deg+1)) or Metropolis-Hastings (safe for irregular graphs).
+
+Time-varying gossip: the theory only needs each round's W_r symmetric doubly
+stochastic and the *sequence* connected on average, so :class:`GossipPlan`
+generalizes a single Topology to a per-sync-round sequence of mixing matrices —
+random perfect matchings, edge-sampled subgraphs of a base graph, or a
+round-robin cycle over a graph list — with the spectral quantities resolved per
+plan (``delta_eff`` from the round-averaged matrix, gamma* worst-case over the
+support).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -53,15 +61,20 @@ def complete_adjacency(n: int) -> np.ndarray:
 
 def _try_regular(n: int, deg: int, rng) -> Optional[np.ndarray]:
     """One rejection-sampling attempt at a deg-regular simple graph:
-    deg//2 random cyclic 2-factors plus, for odd deg, one random perfect
-    matching. Returns None on any edge collision (caller retries)."""
+    deg//2 random Hamiltonian cycles (cyclic 2-factors) plus, for odd deg,
+    one random perfect matching. A cycle is built from a random node order,
+    so it is fixed-point- and 2-cycle-free by construction; only collisions
+    BETWEEN factors reject the attempt (caller retries). The old draw-a-
+    permutation-and-hope construction was valid only ~0.8% of the time at
+    (n=16, deg=4), so ~1 in 5 seeds burned all 200 retries and crashed."""
     a = np.zeros((n, n))
     for _ in range(deg // 2):
-        perm = rng.permutation(n)
-        for i, j in enumerate(perm):
-            if i == j or a[i, j]:
+        order = rng.permutation(n)
+        for i in range(n):
+            u, v = order[i], order[(i + 1) % n]
+            if u == v or a[u, v]:
                 return None
-            a[i, j] = a[j, i] = 1
+            a[u, v] = a[v, u] = 1
     if deg % 2 == 1:
         order = rng.permutation(n)
         for i, j in zip(order[0::2], order[1::2]):
@@ -136,6 +149,17 @@ def metropolis_mixing(adj: np.ndarray) -> np.ndarray:
     return w
 
 
+def _lemma6_gamma(delta: float, beta: float, omega: float) -> float:
+    """Lemma 6 / Theorems 1-2 consensus stepsize from (delta, beta, omega).
+
+    One arithmetic path shared by ``Topology.gamma_star`` and
+    ``GossipPlan.gamma_star`` so a static plan resolves the exact same float
+    as its underlying topology."""
+    denom = (64 * delta + delta * delta + 16 * beta * beta
+             + 8 * delta * beta * beta - 16 * delta * omega)
+    return 2.0 * delta * omega / denom
+
+
 @dataclasses.dataclass(frozen=True)
 class Topology:
     """A mixing matrix plus the spectral quantities the theory needs."""
@@ -167,9 +191,7 @@ class Topology:
 
     def gamma_star(self, omega: float) -> float:
         """Consensus stepsize of Lemma 6 / Theorems 1-2."""
-        d, b = self.delta, self.beta
-        denom = 64 * d + d * d + 16 * b * b + 8 * d * b * b - 16 * d * omega
-        return 2.0 * d * omega / denom
+        return _lemma6_gamma(self.delta, self.beta, omega)
 
     def p(self, omega: float) -> float:
         return self.gamma_star(omega) * self.delta / 8.0
@@ -188,12 +210,37 @@ class Topology:
         mask[i] = False
         return np.nonzero(mask)[0]
 
-    def validate(self, atol: float = 1e-10) -> None:
-        w = self.w
-        assert np.allclose(w, w.T, atol=atol), "W must be symmetric"
-        assert np.allclose(w.sum(0), 1.0, atol=atol), "W must be doubly stochastic"
-        assert np.all(w >= -atol), "W must be nonnegative"
-        assert self.delta > 0, "graph must be connected (delta > 0)"
+    def validate(self, atol: float = 1e-10, *,
+                 require_connected: bool = True) -> None:
+        """Raise ``ValueError`` on an invalid mixing matrix.
+
+        Real exceptions, not ``assert``: these checks guard user-supplied
+        matrices and must survive ``python -O`` (assert statements are
+        stripped under optimization). ``require_connected=False`` is for the
+        individual rounds of a time-varying :class:`GossipPlan`, where a
+        single W_r (e.g. one matching) is legitimately disconnected and only
+        the round average needs a spectral gap."""
+        w, name = self.w, self.name
+        if not np.allclose(w, w.T, atol=atol):
+            raise ValueError(
+                f"mixing matrix {name!r} is not symmetric: max asymmetry "
+                f"{np.abs(w - w.T).max():.3e} exceeds atol={atol}")
+        if not np.allclose(w.sum(0), 1.0, atol=atol):
+            raise ValueError(
+                f"mixing matrix {name!r} is not doubly stochastic: column "
+                f"sums range [{w.sum(0).min():.6f}, {w.sum(0).max():.6f}], "
+                f"need 1.0 (use uniform_mixing/metropolis_mixing on a 0/1 "
+                f"adjacency)")
+        if not np.all(w >= -atol):
+            raise ValueError(
+                f"mixing matrix {name!r} has negative weights (min "
+                f"{w.min():.3e}); mixing weights must be nonnegative")
+        if require_connected and not self.delta > 0:
+            raise ValueError(
+                f"graph {name!r} is disconnected (spectral gap delta = "
+                f"{self.delta:.3e} <= 0); the theory needs a connected graph "
+                f"— for per-round matrices of a time-varying plan pass "
+                f"require_connected=False and check GossipPlan.delta_eff")
 
 
 def make_topology(kind: str, n: int, *, deg: int = 4, seed: int = 0,
@@ -202,7 +249,11 @@ def make_topology(kind: str, n: int, *, deg: int = 4, seed: int = 0,
         adj = ring_adjacency(n)
     elif kind == "torus2d":
         r = int(np.sqrt(n))
-        assert r * r == n, "torus2d needs a square node count"
+        if r * r != n:
+            # ValueError, not assert: must survive `python -O`
+            raise ValueError(
+                f"torus2d needs a square node count, got n={n} "
+                f"(nearest squares: {r * r} and {(r + 1) * (r + 1)})")
         adj = torus2d_adjacency(r, r)
     elif kind == "complete":
         adj = complete_adjacency(n)
@@ -214,3 +265,224 @@ def make_topology(kind: str, n: int, *, deg: int = 4, seed: int = 0,
     t = Topology(w=w, name=kind)
     t.validate()
     return t
+
+
+def circulant_row(w: np.ndarray, atol: float = 1e-12) -> Optional[np.ndarray]:
+    """First row ``c`` of ``w`` if it is circulant (w[i, j] == c[(j-i) % n]),
+    else ``None``.
+
+    Circulant mixing matrices (ring, any shift-symmetric graph) let the SPMD
+    runtime lower ``W x - x`` to a handful of ``jnp.roll`` collective-permutes
+    instead of a dense tensordot (dist/sparq_dist.py)."""
+    w = np.asarray(w)
+    c = w[0]
+    for i in range(1, w.shape[0]):
+        if not np.allclose(w[i], np.roll(c, i), atol=atol):
+            return None
+    return c
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipPlan:
+    """A (possibly time-varying) sequence of mixing matrices, one per sync
+    round: round ``r`` gossips over ``ws[r % R]``.
+
+    ``ws`` is a stacked ``(R, n, n)`` float array — the whole support lives in
+    one device constant so the engines can look the active matrix up by
+    ``sync_rounds`` *inside* their scans and the full trajectory stays one XLA
+    program. ``R == 1`` is a static plan and reproduces the plain-Topology
+    path exactly.
+
+    Spectral quantities for the time-varying case:
+
+    * ``delta_eff`` — spectral gap of the round-averaged matrix
+      ``mean_r W_r``: the connectivity-in-expectation quantity (a single
+      matching is disconnected on its own; the *sequence* mixes).
+    * ``gamma_star(omega)`` — worst case over the support: the Lemma-6
+      formula evaluated at ``(delta_eff, beta_r)`` for every round, minimized
+      over ``r`` (every round's consensus step must be safe under the
+      bounciest W_r). For a static plan this is exactly the underlying
+      topology's gamma*.
+    """
+
+    ws: np.ndarray           # (R, n, n) stacked symmetric doubly-stochastic
+    name: str = "static"
+
+    def __post_init__(self):
+        ws = np.asarray(self.ws, np.float64)
+        if ws.ndim != 3 or ws.shape[1] != ws.shape[2] or ws.shape[0] < 1:
+            raise ValueError(
+                f"GossipPlan.ws must be a (R >= 1, n, n) stack, got shape "
+                f"{ws.shape}")
+        object.__setattr__(self, "ws", ws)
+
+    # ---------------------------------------------------------- constructors
+    @classmethod
+    def from_topology(cls, topology: Topology) -> "GossipPlan":
+        """Static plan: the same mixing matrix every sync round."""
+        return cls(ws=topology.w[None], name=topology.name)
+
+    @classmethod
+    def cycle(cls, topologies: Sequence[Topology]) -> "GossipPlan":
+        """Round-robin over an explicit graph list (e.g. alternating the row
+        and column rings of a torus, or a fresh expander per round)."""
+        tops = list(topologies)
+        if not tops:
+            raise ValueError("GossipPlan.cycle needs at least one topology")
+        sizes = {t.n for t in tops}
+        if len(sizes) != 1:
+            raise ValueError(
+                f"GossipPlan.cycle topologies disagree on node count: "
+                f"{sorted(sizes)}")
+        plan = cls(ws=np.stack([t.w for t in tops]),
+                   name="cycle(" + ",".join(t.name for t in tops) + ")")
+        plan.validate()
+        return plan
+
+    @classmethod
+    def matchings(cls, n: int, rounds: int = 8, seed: int = 0) -> "GossipPlan":
+        """Random perfect-matching gossip: each round pairs the ``n`` nodes
+        (n even) uniformly at random; matched pairs average with weight 1/2.
+        Each W_r alone is disconnected — connectivity holds in expectation
+        (``delta_eff`` of the round average)."""
+        if n < 2 or n % 2:
+            raise ValueError(
+                f"random perfect matchings need an even node count >= 2, "
+                f"got n={n}")
+        if rounds < 1:
+            raise ValueError(f"need rounds >= 1, got {rounds}")
+        rng = np.random.default_rng(seed)
+        ws = []
+        for _ in range(rounds):
+            order = rng.permutation(n)
+            w = np.eye(n)
+            for i, j in zip(order[0::2], order[1::2]):
+                w[i, i] = w[j, j] = 0.5
+                w[i, j] = w[j, i] = 0.5
+            ws.append(w)
+        plan = cls(ws=np.stack(ws), name=f"matchings(R={rounds})")
+        plan.validate()
+        return plan
+
+    @classmethod
+    def edge_sampled(cls, base: Topology, rounds: int = 8, p: float = 0.5,
+                     seed: int = 0, mixing: str = "uniform") -> "GossipPlan":
+        """Per-round random subgraphs of ``base``: every edge of the base
+        graph is kept independently with probability ``p`` each round, and
+        the sampled adjacency gets fresh ``mixing`` weights. Nodes isolated
+        in a round simply keep their iterate (W row = e_i) and send nothing
+        (per-round degree 0 in the bit accounting)."""
+        if not 0.0 < p <= 1.0:
+            raise ValueError(f"edge keep-probability must be in (0, 1], "
+                             f"got {p}")
+        if rounds < 1:
+            raise ValueError(f"need rounds >= 1, got {rounds}")
+        n = base.n
+        adj = (base.w > 0).astype(np.float64)
+        np.fill_diagonal(adj, 0.0)
+        mix = uniform_mixing if mixing == "uniform" else metropolis_mixing
+        rng = np.random.default_rng(seed)
+        ws = []
+        for _ in range(rounds):
+            keep = np.triu(rng.random((n, n)) < p, k=1)
+            a = adj * (keep | keep.T)
+            ws.append(mix(a))
+        plan = cls(ws=np.stack(ws),
+                   name=f"edges({base.name},p={p},R={rounds})")
+        plan.validate()
+        return plan
+
+    # ------------------------------------------------------------ properties
+    @property
+    def n(self) -> int:
+        return self.ws.shape[1]
+
+    @property
+    def R(self) -> int:
+        """Support size / period: round r uses ws[r % R]."""
+        return self.ws.shape[0]
+
+    @property
+    def is_static(self) -> bool:
+        return self.R == 1
+
+    def round_topology(self, r: int) -> Topology:
+        """The Topology active at sync round ``r`` (may be disconnected for
+        a genuinely time-varying plan)."""
+        r = r % self.R
+        return Topology(w=self.ws[r], name=f"{self.name}[{r}]")
+
+    @property
+    def w_bar(self) -> np.ndarray:
+        """Round-averaged mixing matrix mean_r W_r."""
+        return self.ws.mean(0)
+
+    @property
+    def delta_eff(self) -> float:
+        """Spectral gap of ``w_bar`` — connectivity in expectation."""
+        return Topology(w=self.w_bar, name=f"{self.name}:avg").delta
+
+    @property
+    def beta_max(self) -> float:
+        """Worst-case ||W_r - I||_2 over the support."""
+        return max(self.round_topology(r).beta for r in range(self.R))
+
+    @property
+    def degrees(self) -> np.ndarray:
+        """(R, n) per-round neighbor counts — the bit accounting charges each
+        node deg_r[i] messages at a sync round of the *active* graph."""
+        return np.stack([self.round_topology(r).degrees
+                         for r in range(self.R)])
+
+    def gamma_star(self, omega: float) -> float:
+        """Worst case over the support (see class docstring)."""
+        d = self.delta_eff
+        return min(_lemma6_gamma(d, self.round_topology(r).beta, omega)
+                   for r in range(self.R))
+
+    def p(self, omega: float) -> float:
+        return self.gamma_star(omega) * self.delta_eff / 8.0
+
+    def validate(self, atol: float = 1e-10) -> None:
+        """Every round symmetric doubly stochastic; connected on average."""
+        for r in range(self.R):
+            self.round_topology(r).validate(atol=atol,
+                                            require_connected=False)
+        if not self.delta_eff > 0:
+            raise ValueError(
+                f"gossip plan {self.name!r} is disconnected in expectation "
+                f"(delta_eff = {self.delta_eff:.3e} <= 0): the round-averaged "
+                f"graph must be connected for consensus to form")
+
+
+def make_plan(kind: str = "ring", n: int = 8, *, deg: int = 4, seed: int = 0,
+              mixing: str = "uniform", dynamic: str = "none", rounds: int = 8,
+              edge_frac: float = 0.5) -> GossipPlan:
+    """One entry point for every (static or time-varying) communication plan.
+
+    ``dynamic``:
+
+    * ``"none"`` — static ``make_topology(kind, n, ...)`` plan.
+    * ``"matchings"`` — random perfect matchings, a fresh pairing per round
+      (``kind`` is ignored; matchings are sampled over the complete graph).
+    * ``"edges"`` — per-round edge-sampled subgraphs of the ``kind`` base
+      graph, keeping each edge with probability ``edge_frac``.
+    * ``"cycle"`` — round-robin over ``rounds`` graphs of the given ``kind``
+      built with seeds ``seed .. seed+rounds-1`` (a fresh expander per round
+      for ``kind="expander"``; deterministic kinds repeat the same graph).
+    """
+    if dynamic in ("none", "static", ""):
+        return GossipPlan.from_topology(
+            make_topology(kind, n, deg=deg, seed=seed, mixing=mixing))
+    if dynamic == "matchings":
+        return GossipPlan.matchings(n, rounds=rounds, seed=seed)
+    if dynamic == "edges":
+        base = make_topology(kind, n, deg=deg, seed=seed, mixing=mixing)
+        return GossipPlan.edge_sampled(base, rounds=rounds, p=edge_frac,
+                                       seed=seed, mixing=mixing)
+    if dynamic == "cycle":
+        return GossipPlan.cycle(
+            [make_topology(kind, n, deg=deg, seed=seed + r, mixing=mixing)
+             for r in range(rounds)])
+    raise ValueError(
+        f"unknown dynamic plan {dynamic!r}; have none|matchings|edges|cycle")

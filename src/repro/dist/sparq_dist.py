@@ -16,32 +16,45 @@ Per sync index (every H steps):
     x_hat'    = x_hat + q                                      (line 13)
     x^{t+1}   = x^{t+1/2} + gamma (W x_hat' - x_hat')          (line 15)
 
-Communication variants over the ring graph W = ring(n):
+The communication graph is pluggable (core.topology.GossipPlan): any static
+Topology (ring/torus2d/complete/expander, uniform or Metropolis mixing) or a
+time-varying plan (random matchings, edge-sampled subgraphs, a round-robin
+graph cycle). The plan's whole ``(R, n, n)`` support is one device constant;
+the sync branch looks the active ``W_r`` up by ``sync_rounds % R`` and the
+per-node bit accounting charges the *active* round's degrees ``deg_r``.
+
+Mixing implementation (``variant``):
 
 * ``dense`` — mixing materialized as a tensordot over the node axis
-  (all-gather along ``node``; exact W X for any W).
-* ``ring``  — neighbor exchange only: w (roll_{+1} x + roll_{-1} x - 2 x),
-  which XLA lowers to collective-permutes along ``node``. Identical algebra
-  for uniform ring mixing when n > 2 (n <= 2 falls back to dense).
+  (all-gather along ``node``; exact W X for any W, static or time-varying).
+* ``shift`` (alias ``ring``) — circulant lowering: a static circulant W
+  (w[i, j] depends only on (j - i) mod n — ring, any shift-symmetric graph)
+  decomposes into per-shift ``jnp.roll`` terms, which XLA lowers to
+  collective-permutes along ``node``. Falls back to ``dense`` when the plan
+  is time-varying, the graph is not circulant, or n <= 2.
 
-Compression is the paper's headline SignTopK at a per-tensor top-``frac``
-(core.compression.TopFrac); ``use_kernel=True`` swaps in the fused Pallas
-blockwise kernel (kernels/sign_topk.py) with per-1024-block selection.
+Compression defaults to the paper's headline SignTopK at a per-tensor
+top-``frac`` (core.compression.TopFrac); ``compressor=`` swaps in any
+registry operator (the sync branch derives per-node PRNG keys from the step
+counter, so stochastic compressors are fine); ``use_kernel=True`` swaps in
+the fused Pallas blockwise kernel (kernels/sign_topk.py) with per-1024-block
+selection.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import bits as bits_mod
-from repro.core.compression import TopFrac, compress_tree, tree_payload_bits
+from repro.core.compression import (Compressor, TopFrac, compress_tree,
+                                    tree_payload_bits)
 from repro.core.schedule import LRSchedule, decaying
 from repro.core.sparq import gossip_mix, sync_message_bits, trigger_mask
-from repro.core.topology import make_topology
+from repro.core.topology import GossipPlan, Topology, circulant_row, make_plan
 from repro.core.triggers import ThresholdSchedule, zero
 from repro.kernels.sign_topk import BLOCK, BLOCK_ROWS, sign_topk_blocks
 from repro.models.transformer import init_params, lm_loss
@@ -55,7 +68,7 @@ class DistSparqConfig:
     """Runtime knobs of the distributed engine (model knobs live on ModelConfig)."""
 
     H: int = 1                       # gap(I_T): sync every H steps
-    variant: str = "dense"           # dense | ring (mixing implementation)
+    variant: str = "dense"           # dense | shift (alias ring): mixing impl
     frac: float = 1.0                # per-tensor SignTopK fraction (Section 5.2)
     use_kernel: bool = False         # Pallas fused blockwise compression
     threshold: ThresholdSchedule = zero()
@@ -67,20 +80,86 @@ class DistSparqConfig:
     gamma: Optional[float] = None    # None -> gamma* from Lemma 6
     microbatches: int = 1            # grad accumulation within a node
     xhat_dtype: str = "float32"      # public-estimate storage dtype
+    # ---- communication graph (core/topology.py) ----
+    topology: Union[str, Topology, None] = None
+                                     # graph kind ("ring"|"torus2d"|"complete"
+                                     # |"expander") built at the resolved
+                                     # ensemble size, or an explicit Topology
+                                     # (its n must match); None -> "ring"
+    deg: int = 4                     # expander degree (kind strings only)
+    mixing: str = "uniform"          # uniform | metropolis (kind strings only)
+    dynamic: str = "none"            # none | matchings | edges | cycle —
+                                     # time-varying plan family (make_plan)
+    rounds: int = 8                  # dynamic support size / period R
+    edge_frac: float = 0.5           # edge keep-probability (dynamic="edges")
+    topo_seed: int = 0               # graph / plan sampling seed
+    plan: Optional[GossipPlan] = None  # full override; wins over all of the
+                                       # above (its n must match)
+    compressor: Optional[Compressor] = None  # per-tensor op; None ->
+                                             # TopFrac(frac). Stochastic ops
+                                             # are fine: the sync branch folds
+                                             # a PRNG key from the step counter
+    seed: int = 0                    # base PRNG seed for stochastic compressors
 
     def resolved_optimizer(self) -> Optimizer:
         return resolve_optimizer(self.optimizer, self.momentum,
                                  nesterov=self.nesterov)
 
-    def resolved_gamma(self, topo, d: Optional[int] = None) -> float:
+    def resolved_plan(self, n: int) -> GossipPlan:
+        """Communication plan at ensemble size ``n`` (the mesh-stretched node
+        count build_sparq resolves): ``plan=`` verbatim, an explicit Topology
+        as a static plan, or a kind string built here via make_plan."""
+        if self.plan is not None:
+            if self.plan.n != n:
+                raise ValueError(
+                    f"plan {self.plan.name!r} has n={self.plan.n} but the "
+                    f"resolved ensemble size is {n} (cfg.n_nodes stretched "
+                    f"over the mesh node axis; see build_sparq.__doc__)")
+            return self.plan
+        if isinstance(self.topology, Topology):
+            if self.dynamic not in ("none", "static", ""):
+                raise ValueError(
+                    f"dynamic={self.dynamic!r} with an explicit Topology is "
+                    f"ambiguous — pass plan= (e.g. GossipPlan.edge_sampled/"
+                    f"cycle) or a kind string instead")
+            if self.topology.n != n:
+                raise ValueError(
+                    f"topology {self.topology.name!r} has n={self.topology.n} "
+                    f"but the resolved ensemble size is {n}")
+            return GossipPlan.from_topology(self.topology)
+        return make_plan(self.topology or "ring", n, deg=self.deg,
+                         seed=self.topo_seed, mixing=self.mixing,
+                         dynamic=self.dynamic, rounds=self.rounds,
+                         edge_frac=self.edge_frac)
+
+    def resolved_compressor(self) -> Compressor:
+        if self.compressor is not None:
+            if self.use_kernel:
+                raise ValueError(
+                    "use_kernel=True hard-wires the fused Pallas SignTopK "
+                    "blockwise operator; a custom compressor= cannot ride it")
+            return self.compressor
+        return TopFrac(frac=self.frac)
+
+    def resolved_gamma(self, plan, d: Optional[int] = None) -> float:
+        """``plan`` is a GossipPlan or Topology (both expose gamma_star; a
+        time-varying plan resolves the worst case over its support)."""
         if self.gamma is not None:
             return float(self.gamma)
         # defer to the operator's own omega at the true model dimension
         # (TopFrac.omega: k/d with k = ceil(frac*d) — frac in the d->inf
         # limit), exactly what the reference engine's gamma* resolution uses
-        frac = min(self.frac, 1.0)
-        om = TopFrac(frac=frac).omega(d) if d else frac
-        return float(topo.gamma_star(max(om, 1e-3)))
+        comp = self.resolved_compressor()
+        if d:
+            om = comp.omega(d)
+        elif self.compressor is None:
+            om = min(self.frac, 1.0)    # TopFrac's omega in the d->inf limit
+        else:
+            raise ValueError(
+                "resolved_gamma() needs the model dimension d when gamma is "
+                "None and a custom compressor= is set: its contraction "
+                "omega(d) is dimension-dependent")
+        return float(plan.gamma_star(max(om, 1e-3)))
 
 
 def _node_sq_dist(x_half, x_hat):
@@ -135,26 +214,35 @@ def build_sparq(cfg, mesh, dcfg: DistSparqConfig
     # ensemble size: cfg.n_nodes stretched to stay divisible by the mesh node
     # axis (pod-folded meshes can carry more rows than cfg.n_nodes)
     n = cfg.n_nodes * node_ax // math.gcd(cfg.n_nodes, node_ax)
-    topo = make_topology("ring", n)
-    W = jnp.asarray(topo.w, jnp.float32)
-    w_off = float(topo.w[0, 1]) if n > 2 else 0.0
-    deg = jnp.asarray(topo.degrees, jnp.float32)
-    comp = TopFrac(frac=dcfg.frac)
+    plan = dcfg.resolved_plan(n)
+    R = plan.R
+    Ws = jnp.asarray(plan.ws, jnp.float32)          # (R, n, n) support
+    degs = jnp.asarray(plan.degrees, jnp.float32)   # (R, n) active degrees
+    comp = dcfg.resolved_compressor()
     opt = dcfg.resolved_optimizer()
     H = int(dcfg.H)
     mbs = int(dcfg.microbatches)
     xhat_dt = jnp.dtype(dcfg.xhat_dtype)
     interpret = jax.default_backend() != "tpu"
     k_b = max(1, min(BLOCK, int(math.ceil(dcfg.frac * BLOCK))))
-    if dcfg.variant not in ("dense", "ring"):
+    if dcfg.variant not in ("dense", "ring", "shift"):
         raise ValueError(f"unknown variant {dcfg.variant!r}")
-    use_ring = dcfg.variant == "ring" and n > 2
+    # circulant lowering: static circulant graphs decompose W x - x into
+    # per-shift jnp.roll terms (collective-permutes along `node`); anything
+    # else — time-varying plans, irregular graphs, n <= 2 — runs dense
+    shift_row = (circulant_row(plan.ws[0])
+                 if dcfg.variant in ("ring", "shift") and R == 1 and n > 2
+                 else None)
+    shift_terms = ([(s, float(shift_row[s])) for s in range(1, n)
+                    if shift_row[s] > 0.0]
+                   if shift_row is not None else None)
+    base_key = jax.random.PRNGKey(dcfg.seed)
 
     pshape = jax.eval_shape(lambda k: init_params(cfg, k),
                             jax.random.PRNGKey(0))
     d_model_total = sum(math.prod(leaf.shape) or 1
                         for leaf in jax.tree.leaves(pshape))
-    gamma = dcfg.resolved_gamma(topo, d_model_total)
+    gamma = dcfg.resolved_gamma(plan, d_model_total)
     if dcfg.use_kernel:
         # the Pallas path is a BLOCKWISE operator: k_b entries (plus ties) and
         # one scale per 1024-element block — charge what it actually sends
@@ -226,14 +314,17 @@ def build_sparq(cfg, mesh, dcfg: DistSparqConfig
                                          jax.tree.map(split, batch))
         return l_tot / mbs, jax.tree.map(lambda g: g / mbs, g_tot)
 
-    def mix_term(xh_leaf):
-        """Consensus term (W x_hat - x_hat) over the leading node axis."""
+    def mix_term(xh_leaf, W_r):
+        """Consensus term (W_r x_hat - x_hat) over the leading node axis."""
         x = xh_leaf.astype(jnp.float32)
-        if use_ring:
-            up = jnp.roll(x, 1, axis=0)
-            down = jnp.roll(x, -1, axis=0)
-            return w_off * (up + down - 2.0 * x)
-        return gossip_mix(W, x)
+        if shift_terms is not None:
+            # circulant decomposition: (W x)_i = sum_s c_s x_{(i+s) mod n},
+            # so W x - x = (c_0 - 1) x + sum_{s>0, c_s>0} c_s roll(x, -s)
+            acc = (float(shift_row[0]) - 1.0) * x
+            for s, c_s in shift_terms:
+                acc = acc + c_s * jnp.roll(x, -s, axis=0)
+            return acc
+        return gossip_mix(W_r, x)
 
     def train_step(state: State, batch) -> Tuple[State, Dict[str, jax.Array]]:
         lead = {leaf.shape[0] for leaf in jax.tree.leaves(batch)}
@@ -251,6 +342,13 @@ def build_sparq(cfg, mesh, dcfg: DistSparqConfig
 
         def sync_branch(op):
             xh, xe = op
+            # active round's graph: static plans bind W_0 so the lowered
+            # program is identical to the fixed-topology days
+            if R == 1:
+                W_r, deg_r = Ws[0], degs[0]
+            else:
+                r = jax.lax.rem(state["sync_rounds"], jnp.int32(R))
+                W_r, deg_r = Ws[r], degs[r]
             c_t = dcfg.threshold(state["t"])
             trig = trigger_mask(_node_sq_dist(xh, xe), c_t, eta)     # (n,)
             trigf = trig.astype(jnp.float32)
@@ -262,7 +360,12 @@ def build_sparq(cfg, mesh, dcfg: DistSparqConfig
                 diff = jax.tree.map(
                     lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
                     xh, xe)
-                q = jax.vmap(lambda tr: compress_tree(comp, tr))(diff)
+                # per-node keys folded from the step counter: deterministic
+                # operators (TopFrac) ignore them, stochastic ones (RandK,
+                # QSGD, ...) finally get real randomness in the dist engine
+                kc = jax.random.fold_in(base_key, state["t"])
+                q = jax.vmap(lambda tr, k: compress_tree(comp, tr, k))(
+                    diff, jax.random.split(kc, n))
             gate = lambda ql: ql * trigf.reshape((n,) + (1,) * (ql.ndim - 1))
             q = jax.tree.map(gate, q)                                # line 11
             xe_new = jax.tree.map(
@@ -270,11 +373,11 @@ def build_sparq(cfg, mesh, dcfg: DistSparqConfig
                 xe, q)                                               # line 13
             x_new = jax.tree.map(
                 lambda h, e: (h.astype(jnp.float32)
-                              + gamma * mix_term(e)).astype(h.dtype),
+                              + gamma * mix_term(e, W_r)).astype(h.dtype),
                 xh, xe_new)                                          # line 15
             new_bits, new_c = bits_mod.acc_add(
                 state["bits"], state["bits_c"],
-                sync_message_bits(trig, deg, payload))
+                sync_message_bits(trig, deg_r, payload))
             return (x_new, xe_new, new_bits, new_c,
                     state["sync_rounds"] + 1,
                     state["triggers"] + jnp.sum(trig).astype(jnp.int32))
@@ -297,4 +400,8 @@ def build_sparq(cfg, mesh, dcfg: DistSparqConfig
         return new_state, metrics
 
     init_fn.n_nodes = train_step.n_nodes = n
+    # the ACTUALLY-running plan, for callers that want to log/inspect it
+    # without re-resolving (sampled plans are seed-deterministic, but the
+    # engine's own object is the source of truth)
+    init_fn.plan = train_step.plan = plan
     return init_fn, train_step, state_specs, pshape

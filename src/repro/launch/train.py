@@ -7,6 +7,15 @@ real pod, omit ``--devices`` (jax discovers the TPU mesh) and drop ``--reduced``
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
       --devices 8 --reduced --steps 40 --log-every 5
+
+The communication graph is pluggable: ``--topology`` picks the static graph
+(ring/torus2d/complete/expander with ``--deg``/``--mixing``), ``--dynamic``
+switches to a time-varying plan (random matchings, per-round edge-sampled
+subgraphs, or a round-robin graph cycle; see core/topology.py make_plan).
+
+Checkpointing covers the FULL train state (params, x_hat, optimizer buffers,
+step counter, bits/trigger accounting) so ``--resume`` continues the exact
+trajectory instead of silently resetting momentum and the step counter.
 """
 import argparse
 import os
@@ -26,7 +35,27 @@ def _parse():
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--H", type=int, default=5)
     ap.add_argument("--frac", type=float, default=0.1)
-    ap.add_argument("--variant", default="ring", choices=["dense", "ring"])
+    ap.add_argument("--variant", default="ring",
+                    choices=["dense", "ring", "shift"],
+                    help="mixing impl: dense tensordot, or circulant "
+                         "shift/roll lowering (falls back to dense off "
+                         "circulant graphs and time-varying plans)")
+    ap.add_argument("--topology", default="ring",
+                    choices=["ring", "torus2d", "complete", "expander"],
+                    help="gossip graph at the resolved node count")
+    ap.add_argument("--deg", type=int, default=4,
+                    help="expander degree (--topology expander)")
+    ap.add_argument("--mixing", default="uniform",
+                    choices=["uniform", "metropolis"])
+    ap.add_argument("--dynamic", default="none",
+                    choices=["none", "matchings", "edges", "cycle"],
+                    help="time-varying gossip plan family (none = static)")
+    ap.add_argument("--dynamic-rounds", type=int, default=8,
+                    help="support size / period R of a --dynamic plan")
+    ap.add_argument("--edge-frac", type=float, default=0.5,
+                    help="per-round edge keep-probability (--dynamic edges)")
+    ap.add_argument("--topo-seed", type=int, default=0,
+                    help="graph / plan sampling seed")
     ap.add_argument("--momentum", type=float, default=0.0,
                     help="SQuARM-SGD momentum beta (0 = plain SPARQ)")
     ap.add_argument("--nesterov", action="store_true",
@@ -38,6 +67,9 @@ def _parse():
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the latest checkpoint in --ckpt-dir "
+                         "(full train state: params, x_hat, opt, t, bits)")
     return ap.parse_args()
 
 
@@ -83,19 +115,46 @@ def main():
                               ("data", "model"))
     cfg = dataclasses.replace(cfg, n_nodes=n_nodes)
     mesh = sh.train_mesh(prod_mesh, cfg)
-    print(f"[train] mesh {dict(mesh.shape)}  arch={cfg.arch_id} "
-          f"(~{sum(np.prod(l.shape) for l in jax.tree.leaves(jax.eval_shape(lambda k: __import__('repro.models.transformer', fromlist=['init_params']).init_params(cfg, k), jax.random.PRNGKey(0)))) / 1e6:.1f}M params/node)")
 
     dcfg = DistSparqConfig(
         H=args.H, frac=args.frac, lr=decaying(args.lr, 100.0),
         threshold=constant(args.threshold), momentum=args.momentum,
         nesterov=args.nesterov, variant=args.variant,
-        use_kernel=args.use_kernel)
-    init_fn, train_step, state_specs, _ = build_sparq(cfg, mesh, dcfg)
-    state = init_fn(jax.random.PRNGKey(0))
+        use_kernel=args.use_kernel,
+        topology=args.topology, deg=args.deg, mixing=args.mixing,
+        dynamic=args.dynamic, rounds=args.dynamic_rounds,
+        edge_frac=args.edge_frac, topo_seed=args.topo_seed)
+    init_fn, train_step, state_specs, pshape = build_sparq(cfg, mesh, dcfg)
+    n_params = sum(np.prod(l.shape) for l in jax.tree.leaves(pshape))
+    plan = init_fn.plan   # the engine's own plan, not a re-resolution
+    print(f"[train] mesh {dict(mesh.shape)}  arch={cfg.arch_id} "
+          f"(~{n_params / 1e6:.1f}M params/node)")
+    print(f"[train] gossip plan {plan.name} (R={plan.R}) "
+          f"delta_eff={plan.delta_eff:.4f}")
     ssh = jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs,
                        is_leaf=lambda x: isinstance(x, P))
-    state = jax.device_put(state, ssh)
+
+    start = 0
+    last = None
+    if args.resume:
+        if not args.ckpt_dir:
+            raise SystemExit("[train] --resume needs --ckpt-dir")
+        last = ckpt.latest_step(args.ckpt_dir)
+        if last is None:
+            print(f"[train] --resume: no checkpoint under "
+                  f"{args.ckpt_dir!r}, starting fresh")
+    if last is not None:
+        # the checkpoint carries the FULL train state — params, x_hat,
+        # optimizer buffers, t, bits/bits_c, sync_rounds, triggers —
+        # restored onto the state shardings. restore only needs the state's
+        # structure/shapes, so skip materializing a throwaway random init
+        like = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+        state = ckpt.restore(args.ckpt_dir, last, like=like, shardings=ssh)
+        start = last
+        print(f"[train] resumed full train state from step {last} "
+              f"(t={int(state['t'])}, bits={float(state['bits']):.3e})")
+    else:
+        state = jax.device_put(init_fn(jax.random.PRNGKey(0)), ssh)
 
     pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
                          batch_per_node=args.batch_per_node,
@@ -109,8 +168,9 @@ def main():
     step = jax.jit(train_step, in_shardings=(ssh, bsh),
                    donate_argnums=(0,))
 
+    metrics = None
     t0 = time.time()
-    for i in range(args.steps):
+    for i in range(start, args.steps):
         batch = jax.device_put(pipe.global_batch(i), bsh)
         state, metrics = step(state, batch)
         if (i + 1) % args.log_every == 0:
@@ -118,12 +178,17 @@ def main():
             print(f"[train] step {i+1:5d} loss {m['loss']:.4f} "
                   f"eta {m['eta']:.4f} bits {m['bits']:.3e} "
                   f"triggers {m['triggers']:.0f} "
-                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+                  f"({(time.time()-t0)/(i+1-start):.2f}s/step)")
         if args.ckpt_dir and args.ckpt_every and \
                 (i + 1) % args.ckpt_every == 0:
-            path = ckpt.save(args.ckpt_dir, i + 1,
-                             jax.device_get(state["params"]))
+            path = ckpt.save(args.ckpt_dir, i + 1, jax.device_get(state))
             print(f"[train] checkpoint -> {path}")
+    if metrics is None:
+        # no steps ran (steps <= start, e.g. --steps 0 or an already-complete
+        # resume): there is no final metrics dict to report
+        print(f"[train] DONE no steps run (start={start}, "
+              f"steps={args.steps})")
+        return 0
     m = {k: float(v) for k, v in metrics.items()}
     print(f"[train] DONE loss={m['loss']:.4f} total_bits={m['bits']:.3e} "
           f"trigger_events={m['triggers']:.0f}")

@@ -1,6 +1,7 @@
 """The dist engine must match the core/sparq.py reference leaf-for-leaf.
 
-Same topology (ring), same compressor (per-tensor SignTopK via compress_tree),
+Same communication plan (static ring/expander/torus or a time-varying
+matchings plan), same compressor (per-tensor SignTopK via compress_tree),
 same trigger schedule, same LR/gamma/H, same per-node batches: the node-stacked
 pytree engine (dist/sparq_dist.py) and the dense (n, d) matrix engine
 (core/sparq.py, wired through the identical compress_tree primitive with a
@@ -17,8 +18,8 @@ from jax.flatten_util import ravel_pytree
 from repro.configs.registry import get_config
 from repro.core.compression import TopFrac, compress_tree, tree_payload_bits
 from repro.core.schedule import fixed
-from repro.core.sparq import SparqConfig, init_state, make_step
-from repro.core.topology import make_topology
+from repro.core.sparq import SparqConfig, gossip_mix, init_state, make_step
+from repro.core.topology import GossipPlan, circulant_row, make_topology
 from repro.core.triggers import constant, zero
 from repro.dist import sharding as sh
 from repro.dist.sparq_dist import DistSparqConfig, build_sparq
@@ -59,20 +60,14 @@ class _TreeCompressor:
         return self.comp.omega(d)
 
 
-@pytest.mark.parametrize("threshold,H,beta",
-                         [(zero(), 2, 0.0), (constant(1e12), 3, 0.0),
-                          (zero(), 2, 0.9)],
-                         ids=["always-trigger", "never-trigger",
-                              "momentum-0.9"])
-def test_dist_engine_matches_reference(threshold, H, beta):
-    """beta > 0 pins the SQuARM momentum runtime: both engines resolve the
-    same optim.momentum update through the shared optimizer seam."""
-    cfg, mesh, batch = _setup()
+def _run_both(cfg, mesh, batch, threshold, H, beta, dist_kw, ref_kw):
+    """Run T steps on both engines with identical knobs; return
+    (dist_state, ref_state, dist_flat_params)."""
     frac, gamma, lr = 0.25, 0.3, fixed(0.05)
 
     dcfg = DistSparqConfig(H=H, variant="dense", frac=frac,
                            threshold=threshold, lr=lr, gamma=gamma,
-                           momentum=beta)
+                           momentum=beta, **dist_kw)
     init_fn, train_step, _, pshape = build_sparq(cfg, mesh, dcfg)
     state = init_fn(jax.random.PRNGKey(0))
     step = jax.jit(train_step)
@@ -91,21 +86,107 @@ def test_dist_engine_matches_reference(threshold, H, beta):
             return ravel_pytree(g)[0]
         return jax.vmap(g1)(x_nd, batch["tokens"], batch["labels"])
 
-    rcfg = SparqConfig(topology=make_topology("ring", N), compressor=comp,
-                       threshold=threshold, lr=lr, H=H, gamma=gamma,
-                       momentum=beta)
+    rcfg = SparqConfig(compressor=comp, threshold=threshold, lr=lr, H=H,
+                       gamma=gamma, momentum=beta, **ref_kw)
     rstep = jax.jit(make_step(rcfg, grad_fn))
     rstate = init_state(x0, N, rcfg.resolved_optimizer())
     for t in range(T):
         rstate = rstep(rstate, jax.random.PRNGKey(t))
 
     dist_flat = jax.vmap(lambda tr: ravel_pytree(tr)[0])(state["params"])
+    return state, rstate, dist_flat
+
+
+def _assert_equal(state, rstate, dist_flat):
     np.testing.assert_allclose(np.asarray(dist_flat), np.asarray(rstate.x),
                                atol=5e-4, rtol=0)
     assert int(state["triggers"]) == int(rstate.triggers)
     assert int(state["sync_rounds"]) == int(rstate.sync_rounds)
     np.testing.assert_allclose(float(state["bits"]), float(rstate.bits),
                                rtol=1e-6)
+
+
+@pytest.mark.parametrize("threshold,H,beta",
+                         [(zero(), 2, 0.0), (constant(1e12), 3, 0.0),
+                          (zero(), 2, 0.9)],
+                         ids=["always-trigger", "never-trigger",
+                              "momentum-0.9"])
+def test_dist_engine_matches_reference(threshold, H, beta):
+    """beta > 0 pins the SQuARM momentum runtime: both engines resolve the
+    same optim.momentum update through the shared optimizer seam."""
+    cfg, mesh, batch = _setup()
+    _assert_equal(*_run_both(cfg, mesh, batch, threshold, H, beta,
+                             {}, {"topology": make_topology("ring", N)}))
+
+
+@pytest.mark.parametrize("which", ["expander", "torus2d", "matchings"])
+def test_dist_engine_matches_reference_plans(which):
+    """The pluggable communication layer: dist == reference leaf-for-leaf on
+    non-ring static graphs (expander, torus) and on a time-varying plan
+    (random matchings, W_r looked up by sync round inside both engines,
+    per-round deg_r bit accounting included via the bits pin)."""
+    cfg, mesh, batch = _setup()
+    if which == "matchings":
+        plan = GossipPlan.matchings(N, rounds=3, seed=2)
+        assert plan.R == 3
+        dist_kw, ref_kw = {"plan": plan}, {"plan": plan}
+    else:
+        topo = make_topology(which, N, deg=2, seed=1)
+        dist_kw, ref_kw = {"topology": topo}, {"topology": topo}
+    _assert_equal(*_run_both(cfg, mesh, batch, zero(), 2, 0.0,
+                             dist_kw, ref_kw))
+
+
+def test_dist_kind_string_matches_explicit_topology():
+    """DistSparqConfig accepts the graph as a kind string and builds it at
+    the mesh-resolved ensemble size — identical to passing the Topology."""
+    cfg, mesh, batch = _setup()
+    s1, r1, f1 = _run_both(cfg, mesh, batch, zero(), 2, 0.0,
+                           {"topology": "torus2d"},
+                           {"topology": make_topology("torus2d", N)})
+    _assert_equal(s1, r1, f1)
+
+
+def test_circulant_shift_lowering_matches_dense():
+    """variant="shift" decomposes a static circulant W into jnp.roll terms
+    (collective-permutes on a real mesh). One mix application must agree
+    with the dense tensordot to float32 ULP (the sum orders differ per row,
+    so exact bitwise equality is not defined), and a full run must keep the
+    integer channels (bits, triggers, sync rounds) exactly equal."""
+    for kind, n in (("ring", 8), ("complete", 6)):
+        topo = make_topology(kind, n)
+        row = circulant_row(topo.w)
+        assert row is not None
+        W = jnp.asarray(topo.w, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(0), (n, 33), jnp.float32)
+        shifted = (float(row[0]) - 1.0) * x
+        for s in range(1, n):
+            if row[s] > 0:
+                shifted = shifted + float(row[s]) * jnp.roll(x, -s, axis=0)
+        np.testing.assert_allclose(np.asarray(shifted),
+                                   np.asarray(gossip_mix(W, x)),
+                                   atol=1e-6, rtol=0)
+    # non-circulant graphs must report None (the engine then runs dense)
+    assert circulant_row(make_topology("expander", 8, deg=3, seed=1).w) is None
+
+    cfg, mesh, batch = _setup()
+    out = {}
+    for variant in ("shift", "dense"):
+        dcfg = DistSparqConfig(H=2, variant=variant, frac=0.25,
+                               threshold=zero(), lr=fixed(0.05), gamma=0.3)
+        init_fn, train_step, _, _ = build_sparq(cfg, mesh, dcfg)
+        state = init_fn(jax.random.PRNGKey(0))
+        step = jax.jit(train_step)
+        for _ in range(T):
+            state, _ = step(state, batch)
+        out[variant] = state
+    a, b = out["shift"], out["dense"]
+    for la, lb in zip(jax.tree.leaves(a["params"]), jax.tree.leaves(b["params"])):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=5e-3,
+                                   rtol=0)
+    assert int(a["triggers"]) == int(b["triggers"])
+    assert int(a["sync_rounds"]) == int(b["sync_rounds"])
+    assert float(a["bits"]) == float(b["bits"])
 
 
 def test_trigger_prunes_dist_communication():

@@ -1,11 +1,16 @@
 """Mixing-matrix invariants: symmetric doubly stochastic, delta > 0 for connected
-graphs, Lemma 6 constants in range."""
+graphs, Lemma 6 constants in range; GossipPlan invariants: every sampled W_r
+symmetric doubly stochastic, connected in expectation."""
+import os
+import subprocess
+import sys
+
 import numpy as np
 import pytest
 from hypothesis_compat import given, settings, st
 
-from repro.core.topology import (Topology, make_topology,
-                                 random_regular_adjacency)
+from repro.core.topology import (GossipPlan, Topology, make_plan,
+                                 make_topology, random_regular_adjacency)
 
 
 @settings(max_examples=20, deadline=None)
@@ -96,3 +101,172 @@ def test_impossible_regular_graph_raises_upfront():
         random_regular_adjacency(8, 8)   # deg >= n
     with pytest.raises(ValueError, match="deg"):
         random_regular_adjacency(8, 0)
+
+
+def test_regular_sampler_succeeds_for_every_seed():
+    """Regression: the 2-factor sampler drew a random permutation and hoped
+    it was fixed-point- and 2-cycle-free (~0.8% valid at n=16, deg=4), so
+    ~1 in 5 seeds burned all 200 retries and raised RuntimeError (seed 3
+    crashed make_topology("expander", 16)). Cycles are now built from a
+    random node order — valid by construction, only inter-factor collisions
+    retry — so every seed must sample."""
+    for seed in range(40):
+        a = random_regular_adjacency(16, 4, seed=seed)
+        assert (a.sum(1) == 4).all()
+        assert np.allclose(a, a.T) and np.trace(a) == 0
+
+
+def test_validation_raises_value_error_not_assert():
+    """Hygiene: make_topology's square check and Topology.validate used bare
+    asserts, which vanish under `python -O`; they are real ValueErrors now
+    (CI additionally smokes this under -O)."""
+    with pytest.raises(ValueError, match="square"):
+        make_topology("torus2d", 3)
+    with pytest.raises(ValueError, match="symmetric"):
+        Topology(w=np.triu(np.ones((3, 3)) / 2)).validate()
+    with pytest.raises(ValueError, match="doubly stochastic"):
+        Topology(w=np.ones((2, 2))).validate()
+    with pytest.raises(ValueError, match="nonnegative"):
+        Topology(w=np.array([[1.5, -0.5], [-0.5, 1.5]])).validate()
+    disconnected = Topology(w=np.eye(4))
+    with pytest.raises(ValueError, match="disconnected"):
+        disconnected.validate()
+    disconnected.validate(require_connected=False)  # plan-round escape hatch
+
+
+# ------------------------------------------------------------ gossip plans
+
+def test_static_plan_matches_topology_exactly():
+    t = make_topology("expander", 16, deg=4, seed=1)
+    p = GossipPlan.from_topology(t)
+    assert p.is_static and p.R == 1 and p.n == 16
+    assert p.delta_eff == t.delta
+    assert p.beta_max == t.beta
+    # same floats, not just close: both go through _lemma6_gamma
+    for omega in (0.01, 0.1, 0.5, 1.0):
+        assert p.gamma_star(omega) == t.gamma_star(omega)
+    np.testing.assert_array_equal(p.degrees, t.degrees[None])
+
+
+def _check_plan(plan, n):
+    """Property shared by every time-varying plan: each sampled W_r symmetric
+    doubly stochastic and nonnegative; connected in expectation."""
+    assert plan.ws.shape == (plan.R, n, n)
+    for r in range(plan.R):
+        w = plan.ws[r]
+        assert np.allclose(w, w.T)
+        assert np.allclose(w.sum(0), 1.0) and np.allclose(w.sum(1), 1.0)
+        assert (w >= -1e-12).all()
+    assert plan.delta_eff > 0
+    plan.validate()
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([4, 8, 12, 16]), rounds=st.integers(1, 6),
+       seed=st.integers(0, 1000))
+def test_matchings_plan_properties(n, rounds, seed):
+    try:
+        plan = GossipPlan.matchings(n, rounds=rounds, seed=seed)
+    except ValueError as e:
+        # an unlucky support whose round average is disconnected (certain for
+        # rounds=1: one matching never connects n >= 4 nodes) must be
+        # rejected loudly at construction, never returned silently broken
+        assert "expectation" in str(e)
+        return
+    _check_plan(plan, n)
+    # a perfect matching pairs every node: per-round degree exactly 1
+    np.testing.assert_array_equal(plan.degrees, np.ones((rounds, n)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(kind=st.sampled_from(["ring", "complete", "expander"]),
+       p=st.floats(0.3, 1.0), seed=st.integers(0, 1000))
+def test_edge_sampled_plan_properties(kind, p, seed):
+    base = make_topology(kind, 12, deg=4, seed=seed)
+    try:
+        plan = GossipPlan.edge_sampled(base, rounds=6, p=p, seed=seed)
+    except ValueError as e:
+        # low p on a sparse base can miss an edge in every round; the
+        # disconnected-in-expectation support must be rejected loudly
+        assert "expectation" in str(e)
+        return
+    _check_plan(plan, 12)
+    base_deg = base.degrees
+    assert (plan.degrees <= base_deg[None]).all()   # subgraphs only
+
+
+def test_cycle_plan_and_make_plan_dispatch():
+    tops = [make_topology("ring", 16), make_topology("torus2d", 16)]
+    plan = GossipPlan.cycle(tops)
+    _check_plan(plan, 16)
+    assert plan.R == 2
+    np.testing.assert_array_equal(plan.ws[0], tops[0].w)
+    np.testing.assert_array_equal(plan.ws[1], tops[1].w)
+    # round lookup wraps: round 3 gossips over tops[1] again
+    np.testing.assert_array_equal(plan.round_topology(3).w, tops[1].w)
+    for dyn, R in (("none", 1), ("matchings", 4), ("edges", 4), ("cycle", 4)):
+        pl = make_plan("expander", 16, deg=4, seed=1, dynamic=dyn, rounds=4)
+        assert pl.R == R
+        _check_plan(pl, 16)
+    with pytest.raises(ValueError, match="dynamic"):
+        make_plan("ring", 8, dynamic="nope")
+
+
+def test_plan_rejects_bad_inputs():
+    with pytest.raises(ValueError, match="even"):
+        GossipPlan.matchings(7)
+    with pytest.raises(ValueError, match="rounds"):
+        GossipPlan.matchings(8, rounds=0)
+    with pytest.raises(ValueError, match="keep-probability"):
+        GossipPlan.edge_sampled(make_topology("ring", 8), p=0.0)
+    with pytest.raises(ValueError, match="node count"):
+        GossipPlan.cycle([make_topology("ring", 8), make_topology("ring", 6)])
+    with pytest.raises(ValueError, match="stack"):
+        GossipPlan(ws=np.eye(4))
+    # a plan whose average graph is disconnected must be rejected
+    half = np.eye(4)
+    half[0, 0] = half[1, 1] = 0.5
+    half[0, 1] = half[1, 0] = 0.5
+    with pytest.raises(ValueError, match="expectation"):
+        GossipPlan(ws=half[None], name="one-edge").validate()
+
+
+def test_validation_survives_python_O():
+    """`python -O` strips assert statements; the graph validation must be
+    real exceptions so optimized production runs still reject bad input."""
+    script = (
+        "from repro.core.topology import Topology, make_topology\n"
+        "import numpy as np\n"
+        "for fn in (lambda: make_topology('torus2d', 3),\n"
+        "           lambda: Topology(w=np.ones((2, 2))).validate()):\n"
+        "    try:\n"
+        "        fn()\n"
+        "    except ValueError:\n"
+        "        pass\n"
+        "    else:\n"
+        "        raise SystemExit('validation vanished under -O')\n"
+        "print('OK')\n")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH=os.path.join(root, "src"))
+    r = subprocess.run([sys.executable, "-O", "-c", script], env=env,
+                       capture_output=True, text=True, timeout=120)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout
+
+
+def test_plan_gamma_star_worst_case_over_support():
+    """gamma* of a time-varying plan is the min over its support of the
+    Lemma-6 formula at (delta_eff, beta_r) — adding a bouncier round can
+    only shrink the safe consensus stepsize."""
+    ring = make_topology("ring", 8)
+    both = GossipPlan.cycle([ring, make_topology("complete", 8)])
+    only = GossipPlan.from_topology(ring)
+    # delta_eff of the cycle beats the lone ring (complete rounds help)...
+    assert both.delta_eff > only.delta_eff
+    assert both.beta_max >= only.beta_max
+    # ...and gamma* stays bounded by the best round's own formula value
+    from repro.core.topology import _lemma6_gamma
+    omega = 0.5
+    per_round = [_lemma6_gamma(both.delta_eff, both.round_topology(r).beta,
+                               omega) for r in range(2)]
+    assert both.gamma_star(omega) == min(per_round)
