@@ -1,0 +1,135 @@
+"""Fault-injection & node-heterogeneity suite: does event-triggered,
+compressed gossip keep its edge when the network is actually unreliable?
+
+The paper's pitch is that skipping communication is cheap; the regime where
+that claim earns its keep is flaky links and uneven nodes (EventGraD, Zhai et
+al.). This suite runs SPARQ-SGD vs CHOCO-SGD vs vanilla decentralized SGD on
+the convex workload of bench_convex under core/faults.py injection:
+
+* ``*_clean``            — fault-free reference rows
+* ``*_drop10 / _drop30`` — 10% / 30% iid per-round link drop (surviving
+                           support repaired doubly stochastic, bits charged
+                           only for live links)
+* ``sparq_straggler1/2`` — 1 / 2 straggler nodes skipping half their local
+                           gradient steps
+* ``sparq_mixed``        — 20% drop + a straggler + a dropout/rejoin window
+
+Headline columns: ``final_loss`` degradation vs the method's own clean row
+(``loss_vs_clean``) and the bits actually spent (dropped links are free).
+The event trigger makes SPARQ naturally robust here: sync rounds that would
+carry little information are skipped anyway, so a lost link mostly costs
+redundancy, not progress — the quick BENCH_faults.json artifact pins that
+SPARQ under 30% drop stays within a modest loss gap of its clean run at
+strictly fewer bits.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines, engine
+from repro.core.compression import SignTopK
+from repro.core.faults import DropoutWindow, FaultPlan
+from repro.core.schedule import decaying
+from repro.core.sparq import SparqConfig, make_step
+from repro.core.topology import make_topology
+from repro.core.triggers import piecewise
+from repro.data.synthetic import convex_dataset, logistic_loss_and_grad
+
+
+def run_bench(quick: bool = True) -> List[Dict]:
+    if quick:
+        n, m, f, c, T, mb, rec = 12, 120, 64, 10, 400, 8, 50
+    else:
+        n, m, f, c, T, mb, rec = 32, 200, 784, 10, 2000, 8, 200
+    k = 10
+    d = f * c
+    X, Y = convex_dataset(n, m, n_features=f, n_classes=c, seed=0)
+    Xj, Yj = jnp.asarray(X), jnp.asarray(Y)
+    _, make_grad_fn, full_loss = logistic_loss_and_grad(c)
+    grad_fn = make_grad_fn(Xj, Yj, mb)
+    topo = make_topology("ring", n)
+    lr = decaying(1.0, 100.0)
+    x0 = jnp.zeros(d)
+    key = jax.random.PRNGKey(0)
+
+    def eval_fn(xbar):
+        return full_loss(xbar, Xj, Yj)
+
+    c0 = 30.0 * d
+    thr = piecewise(c0, c0, every=max(T // 8, 1), until=T)
+    comp = SignTopK(k=k)
+
+    def fault_cols(fp):
+        if fp is None:
+            return {"link_drop": 0.0, "stragglers": 0, "dropout_windows": 0}
+        return {"link_drop": fp.link_drop, "stragglers": len(fp.stragglers),
+                "dropout_windows": len(fp.dropout)}
+
+    results = []
+
+    def record(name, method, step_fn, init_state, faults, **extra):
+        """One row schema for every method — a schema change lands once."""
+        runner = engine.make_runner(step_fn, T, record_every=rec,
+                                    eval_fn=eval_fn)
+        st, trace, us = engine.timed_run(runner, init_state, key, T)
+        results.append({
+            "name": name, "us_per_call": round(us, 1), "method": method,
+            "final_loss": round(trace[-1][2], 4), "bits": trace[-1][1],
+            "trigger_events": int(getattr(st, "triggers", T * n)),
+            "sync_rounds": int(getattr(st, "sync_rounds", T)),
+            **fault_cols(faults), "trace": trace, **extra})
+
+    def record_sparq(name, faults):
+        cfg = SparqConfig(topology=topo, compressor=comp, threshold=thr,
+                          lr=lr, H=5, faults=faults)
+        record(name, "sparq", make_step(cfg, grad_fn),
+               lambda: cfg.init_state(x0), faults)
+
+    def record_choco(name, faults):
+        cfg = baselines.choco_config(topo, comp, lr, faults=faults)
+        record(name, "choco", make_step(cfg, grad_fn),
+               lambda: cfg.init_state(x0), faults)
+
+    def record_vanilla(name, faults):
+        record(name, "vanilla",
+               baselines.make_vanilla_step(topo, lr, grad_fn, faults=faults),
+               lambda: baselines.init_vanilla(x0, n), faults)
+
+    drop10 = FaultPlan(link_drop=0.1, seed=1)
+    drop30 = FaultPlan(link_drop=0.3, seed=1)
+    stragg1 = FaultPlan(stragglers=(0,), straggler_frac=0.5, seed=1)
+    stragg2 = FaultPlan(stragglers=(0, n // 2), straggler_frac=0.5, seed=1)
+    mixed = FaultPlan(link_drop=0.2, stragglers=(1,), straggler_frac=0.5,
+                      dropout=(DropoutWindow(2, T // 4, T // 2),), seed=1)
+
+    record_sparq("sparq_clean", None)
+    record_sparq("sparq_drop10", drop10)
+    record_sparq("sparq_drop30", drop30)
+    record_sparq("sparq_straggler1", stragg1)
+    record_sparq("sparq_straggler2", stragg2)
+    record_sparq("sparq_mixed", mixed)
+    record_choco("choco_clean", None)
+    record_choco("choco_drop10", drop10)
+    record_choco("choco_drop30", drop30)
+    record_vanilla("vanilla_clean", None)
+    record_vanilla("vanilla_drop10", drop10)
+    record_vanilla("vanilla_drop30", drop30)
+
+    clean = {r["method"]: (r["trace"][-1][2], r["bits"]) for r in results
+             if r["name"].endswith("_clean")}
+    for r in results:
+        base_loss, base_bits = clean[r["method"]]
+        # robustness: loss degradation vs the method's own fault-free run,
+        # and the bit discount the dead links bought
+        r["loss_vs_clean"] = round(r["trace"][-1][2] - base_loss, 4)
+        r["bits_ratio_vs_clean"] = round(r["bits"] / base_bits, 3)
+        r["trace"] = r["trace"].to_dict()
+    return results
+
+
+if __name__ == "__main__":
+    for r in run_bench(quick=True):
+        print({k: v for k, v in r.items() if k != "trace"})

@@ -6,6 +6,8 @@
                       CHOCO+momentum vs vanilla+momentum)
   bench_ablation   -> Remark 4 (H / omega / trigger ablations)
   bench_topology   -> Footnote 5 (expander vs ring vs torus)
+  bench_faults     -> link-drop / straggler / dropout robustness
+                      (SPARQ vs CHOCO vs vanilla under core/faults.py)
   bench_kernels    -> compression hot-spot kernels (us/call + empirical omega)
   roofline         -> §Roofline summary from dry-run artifacts
 
@@ -76,7 +78,8 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--suite", default="all",
                     choices=["all", "convex", "nonconvex", "momentum",
-                             "ablation", "topology", "kernels", "roofline"])
+                             "ablation", "topology", "faults", "kernels",
+                             "roofline"])
     ap.add_argument("--out-dir", default=os.path.join(root, "results"))
     ap.add_argument("--root-dir", default=root,
                     help="second copy of each BENCH_<suite>.json (the "
@@ -87,15 +90,16 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     quick = not args.full
 
-    from benchmarks import (bench_ablation, bench_convex, bench_kernels,
-                            bench_momentum, bench_nonconvex, bench_topology,
-                            roofline)
+    from benchmarks import (bench_ablation, bench_convex, bench_faults,
+                            bench_kernels, bench_momentum, bench_nonconvex,
+                            bench_topology, roofline)
     suites = {
         "convex": bench_convex.run_bench,
         "nonconvex": bench_nonconvex.run_bench,
         "momentum": bench_momentum.run_bench,
         "ablation": bench_ablation.run_bench,
         "topology": bench_topology.run_bench,
+        "faults": bench_faults.run_bench,
         "kernels": bench_kernels.run_bench,
         "roofline": roofline.run_bench,
     }

@@ -5,6 +5,8 @@ sparsified+quantized gossip — compared against vanilla decentralized SGD.
 
   PYTHONPATH=src python examples/quickstart.py
 """
+import os
+
 import jax
 import jax.numpy as jnp
 
@@ -14,7 +16,9 @@ from repro.core.baselines import init_vanilla, make_vanilla_step, run_generic
 from repro.data.synthetic import convex_dataset, logistic_loss_and_grad
 
 N_NODES, N_CLASSES, N_FEATURES = 12, 10, 64
-T = 1500
+# REPRO_SMOKE: tests/test_examples_smoke.py runs every example end-to-end
+# with a shrunk horizon — same code path, CI-friendly wall time
+T = 120 if os.environ.get("REPRO_SMOKE") else 1500
 
 # heterogeneous per-node data (each node over-samples 2 classes), ring graph
 X, Y = convex_dataset(N_NODES, 150, n_features=N_FEATURES,

@@ -9,6 +9,8 @@ gossip every step, no trigger).
 
   PYTHONPATH=src python examples/squarm_quickstart.py
 """
+import os
+
 import jax
 import jax.numpy as jnp
 
@@ -19,7 +21,9 @@ from repro.data.synthetic import convex_dataset, logistic_loss_and_grad
 from repro.optim.sgd import momentum
 
 N_NODES, N_CLASSES, N_FEATURES = 12, 10, 64
-T = 1500
+# REPRO_SMOKE: tests/test_examples_smoke.py runs every example end-to-end
+# with a shrunk horizon — same code path, CI-friendly wall time
+T = 120 if os.environ.get("REPRO_SMOKE") else 1500
 
 X, Y = convex_dataset(N_NODES, 150, n_features=N_FEATURES,
                       n_classes=N_CLASSES, seed=0)

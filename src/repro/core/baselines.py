@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro.core import bits as bits_mod
 from repro.core import engine
 from repro.core.compression import Compressor
+from repro.core.faults import FaultPlan, resolve_faults
 from repro.core.schedule import LRSchedule
 from repro.core.sparq import GradFn, SparqConfig, SparqState, init_state, make_step
 from repro.core.topology import Topology
@@ -28,11 +29,13 @@ from repro.optim.sgd import Optimizer, resolve_optimizer
 
 def choco_config(topology: Topology, compressor: Compressor, lr: LRSchedule,
                  gamma: Optional[float] = None, momentum: float = 0.0,
-                 optimizer: Optional[Optimizer] = None) -> SparqConfig:
-    """CHOCO-SGD == SPARQ-SGD(H=1, c_t=0)."""
+                 optimizer: Optional[Optimizer] = None,
+                 faults: Optional[FaultPlan] = None) -> SparqConfig:
+    """CHOCO-SGD == SPARQ-SGD(H=1, c_t=0); ``faults`` rides through so the
+    baseline runs under the same injected fault stream as SPARQ."""
     return SparqConfig(topology=topology, compressor=compressor, threshold=zero(),
                        lr=lr, H=1, gamma=gamma, momentum=momentum,
-                       optimizer=optimizer)
+                       optimizer=optimizer, faults=faults)
 
 
 class VanillaState(NamedTuple):
@@ -45,23 +48,39 @@ class VanillaState(NamedTuple):
 
 def make_vanilla_step(topology: Topology, lr: LRSchedule, grad_fn: GradFn,
                       momentum: float = 0.0,
-                      optimizer: Optional[Optimizer] = None):
+                      optimizer: Optional[Optimizer] = None,
+                      faults: Optional[FaultPlan] = None):
     """Decentralized vanilla SGD: exact neighbor averaging every step.
 
     The local update runs through the shared optimizer seam; ``momentum`` is
-    shorthand for ``optimizer=optim.momentum(beta)``."""
+    shorthand for ``optimizer=optim.momentum(beta)``. An active ``faults``
+    plan (core/faults.py) injects the same failure modes SPARQ/CHOCO see:
+    skipped local steps, per-step link drops (vanilla gossips every step, so
+    the link stream is indexed by t) and dropout windows, with bits charged
+    only for live links."""
     opt = resolve_optimizer(optimizer, momentum)
     W = jnp.asarray(topology.w, jnp.float32)
     deg = jnp.asarray(topology.degrees, jnp.float32)
+    n = topology.n
+    flt = resolve_faults(faults)
+    if flt is not None:
+        flt.validate_for(n)
 
     def step(state: VanillaState, key: jax.Array) -> VanillaState:
         d = state.x.shape[-1]
         g = grad_fn(state.x, state.t, key)
         eta = lr(state.t)
         x_half, opt_new = opt.update(g, state.opt, state.x, eta)
-        x_new = (x_half.T @ W.T).T          # X W  (W symmetric)
+        if flt is None:
+            W_t, deg_t = W, deg
+        else:
+            act = flt.step_mask(state.t, n)
+            x_half = jnp.where(act[:, None], x_half, state.x)
+            opt_new = flt.gate_update(act, opt_new, state.opt)
+            W_t, deg_t, _ = flt.apply(W, state.t, state.t)
+        x_new = (x_half.T @ W_t.T).T        # X W  (W symmetric)
         new_bits, new_c = bits_mod.acc_add(
-            state.bits, state.bits_c, jnp.sum(deg) * bits_mod.dense_bits(d))
+            state.bits, state.bits_c, jnp.sum(deg_t) * bits_mod.dense_bits(d))
         return VanillaState(x=x_new, opt=opt_new, t=state.t + 1, bits=new_bits,
                             bits_c=new_c)
 

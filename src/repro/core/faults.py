@@ -1,0 +1,222 @@
+"""Fault injection and node heterogeneity for decentralized training.
+
+The paper's regime of interest is communication-scarce decentralized SGD, but
+a perfectly reliable lockstep deployment is exactly where skipping
+communication matters least. Real decentralized deployments have flaky links
+and uneven nodes (EventGraD [Ghosh et al.], event-triggered gossip
+[Zhai et al.]); :class:`FaultPlan` models the three canonical failure modes
+and threads them through BOTH engines (core/sparq.py and dist/sparq_dist.py)
+behind the same GossipPlan lookup seam:
+
+* **Link drops** — at each sync round, every edge of the active round's
+  mixing matrix ``W_r`` is killed independently with probability
+  ``link_drop``. The surviving support is repaired back to a symmetric
+  doubly-stochastic matrix by *lazy repair*: each dropped edge's weight
+  ``w_ij`` is folded onto BOTH endpoints' diagonals (node i keeps the mass it
+  would have shipped to j, and vice versa). Because the drop mask is
+  symmetric and ``W_r`` is symmetric, the repaired matrix is symmetric with
+  unit row sums — hence doubly stochastic — and nonnegative
+  (``w_ii' = w_ii + sum of dropped w_ij >= 0``). tests/test_faults.py pins
+  this property over random plans, rounds and drop rates.
+* **Stragglers** — the nodes listed in ``stragglers`` skip each local
+  gradient step independently with probability ``straggler_frac`` (slow
+  compute, healthy network: they still gossip every sync round). A skipped
+  step freezes both the iterate and the node's optimizer state.
+* **Dropout / rejoin windows** — ``DropoutWindow(node, start, end)`` takes
+  the node fully offline for steps ``start <= t < end``: no local updates,
+  no sends (its trigger is forced off, so its public copy ``x_hat`` goes
+  stale everywhere), no receives (all its links are dropped, so its row of
+  the repaired matrix is ``e_i``), and zero bits charged. At ``t = end`` the
+  node rejoins from its frozen state and re-syncs through the normal
+  event-trigger mechanism.
+
+Determinism contract: every mask is a pure function of
+``(seed, t, sync_round, n)`` via ``jax.random.fold_in``, so the reference
+(n, d) engine and the distributed pytree engine draw the IDENTICAL fault
+stream from the same config — tests/test_dist_equivalence.py pins the two
+engines equal leaf-for-leaf under an active FaultPlan.
+
+Bit accounting charges only live links: the per-node degree at a faulty sync
+round is the node's count of *surviving* edges in the repaired support
+(``deg_eff``), so dropped links and offline nodes cost nothing — the
+flag-bit convention of core/bits.py applies per live link.
+
+Known idealization (deferred delivery): both engines keep the paper's
+matrix-form representation where one global ``x_hat`` holds every node's
+public copy, so a triggered update ``q_i`` sent while the (i, j) link is
+down still lands in the shared ``x_hat_i`` that j mixes with at the NEXT
+live round — the message is deferred, not lost, and no bits are charged for
+the deferred copy. Modeling truly lost updates (j's copy of ``x_hat_i``
+staying stale until a protocol-level resync) needs per-edge estimate copies
+(n x n x d state) and a recovery rule the paper doesn't define. The
+consequence: bench_faults' loss_vs_clean / bits_ratio_vs_clean numbers are
+an optimistic bound for the compressed protocols under link drops — dropped
+*mixing* is modeled exactly (the repaired W_r), dropped *payload delivery*
+is deferred rather than lost.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+_LINK_STREAM = 0       # fold_in tags: one substream per fault kind so the
+_STRAGGLER_STREAM = 1  # link and straggler draws never collide
+
+
+@dataclasses.dataclass(frozen=True)
+class DropoutWindow:
+    """Node ``node`` is offline for local steps ``start <= t < end``."""
+
+    node: int
+    start: int
+    end: int
+
+    def __post_init__(self):
+        # ValueError, not assert: must survive `python -O`
+        if self.node < 0:
+            raise ValueError(f"DropoutWindow.node must be >= 0, got {self.node}")
+        if not 0 <= self.start < self.end:
+            raise ValueError(
+                f"DropoutWindow needs 0 <= start < end, got "
+                f"[{self.start}, {self.end})")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Composable fault model applied on top of any (static or time-varying)
+    :class:`~repro.core.topology.GossipPlan` — see the module docstring for
+    the three fault kinds and the repair rule."""
+
+    link_drop: float = 0.0                      # iid per-edge, per-sync-round
+    stragglers: Tuple[int, ...] = ()            # nodes that straggle
+    straggler_frac: float = 0.0                 # per-step skip probability
+    dropout: Tuple[DropoutWindow, ...] = ()     # offline windows (step units)
+    seed: int = 0                               # fault-stream PRNG seed
+
+    def __post_init__(self):
+        if not 0.0 <= self.link_drop < 1.0:
+            raise ValueError(
+                f"link_drop must be in [0, 1), got {self.link_drop} "
+                f"(dropping every link every round never mixes)")
+        if not 0.0 <= self.straggler_frac <= 1.0:
+            raise ValueError(
+                f"straggler_frac must be in [0, 1], got {self.straggler_frac}")
+        if self.straggler_frac > 0.0 and not self.stragglers:
+            raise ValueError(
+                "straggler_frac > 0 needs a nonempty stragglers= node list")
+        object.__setattr__(self, "stragglers",
+                           tuple(int(i) for i in self.stragglers))
+        if any(i < 0 for i in self.stragglers):
+            raise ValueError(f"straggler indices must be >= 0, "
+                             f"got {self.stragglers}")
+        object.__setattr__(
+            self, "dropout",
+            tuple(w if isinstance(w, DropoutWindow) else DropoutWindow(*w)
+                  for w in self.dropout))
+
+    @property
+    def is_null(self) -> bool:
+        """True when this plan injects nothing — the engines then keep their
+        exact fault-free lowering (and numerics) of the pre-fault days."""
+        return (self.link_drop == 0.0
+                and not (self.stragglers and self.straggler_frac > 0.0)
+                and not self.dropout)
+
+    def validate_for(self, n: int) -> None:
+        """Check node indices against the resolved ensemble size ``n``."""
+        bad = [i for i in self.stragglers if i >= n]
+        if bad:
+            raise ValueError(f"straggler nodes {bad} out of range for n={n}")
+        bad = [w.node for w in self.dropout if w.node >= n]
+        if bad:
+            raise ValueError(f"dropout-window nodes {bad} out of range "
+                             f"for n={n}")
+
+    # ------------------------------------------------------------ mask draws
+    #
+    # All jit-traceable in (t, sync_round); n is static. Each mask is a pure
+    # function of (seed, counter, n), which is the whole determinism contract.
+
+    def _key(self, stream: int, counter: jax.Array) -> jax.Array:
+        return jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(self.seed), stream),
+            counter)
+
+    def live_mask(self, t: jax.Array, n: int) -> jax.Array:
+        """(n,) bool: node is up (outside every dropout window) at step t."""
+        live = jnp.ones((n,), bool)
+        for w in self.dropout:
+            down = (t >= w.start) & (t < w.end)
+            live = live.at[w.node].set(live[w.node] & ~down)
+        return live
+
+    def step_mask(self, t: jax.Array, n: int) -> jax.Array:
+        """(n,) bool: node performs its local gradient step at step t
+        (not offline, and not a straggler skipping this step)."""
+        active = self.live_mask(t, n)
+        if self.stragglers and self.straggler_frac > 0.0:
+            u = jax.random.uniform(self._key(_STRAGGLER_STREAM, t), (n,))
+            is_straggler = jnp.zeros((n,), bool).at[
+                jnp.asarray(self.stragglers)].set(True)
+            active = active & ~(is_straggler & (u < self.straggler_frac))
+        return active
+
+    def link_mask(self, sync_round: jax.Array, n: int) -> jax.Array:
+        """(n, n) symmetric 0/1 keep mask for sync round ``sync_round`` —
+        each undirected edge survives independently w.p. 1 - link_drop."""
+        if self.link_drop == 0.0:
+            return jnp.ones((n, n), jnp.float32)
+        u = jax.random.uniform(self._key(_LINK_STREAM, sync_round), (n, n))
+        keep = jnp.triu(u >= self.link_drop, k=1)
+        return (keep | keep.T).astype(jnp.float32)
+
+    def apply(self, W_r: jax.Array, t: jax.Array, sync_round: jax.Array
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """Faulty view of the active round's mixing matrix.
+
+        Returns ``(W_eff, deg_eff, live)``:
+
+        * ``W_eff`` — ``W_r`` with dropped / offline links removed and the
+          lost weight lazily repaired onto the diagonal; symmetric doubly
+          stochastic on the surviving support (see module docstring).
+        * ``deg_eff`` — (n,) float32 surviving-neighbor count per node; the
+          bit accounting charges exactly these live links.
+        * ``live`` — (n,) bool node-liveness at step t (gates the trigger:
+          an offline node sends nothing).
+        """
+        n = W_r.shape[0]
+        live = self.live_mask(t, n)
+        keep = self.link_mask(sync_round, n)
+        livef = live.astype(jnp.float32)
+        keep = keep * livef[:, None] * livef[None, :]
+        off = W_r * keep * (1.0 - jnp.eye(n, dtype=W_r.dtype))
+        W_eff = off + jnp.diag(1.0 - jnp.sum(off, axis=1))
+        deg_eff = jnp.sum(off > 0, axis=1).astype(jnp.float32)
+        return W_eff, deg_eff, live
+
+    def gate_update(self, active: jax.Array, new_tree, old_tree):
+        """Freeze skipped nodes: ``new`` where the node stepped, ``old``
+        elsewhere, per node-stacked leaf. Leaves without a leading node axis
+        (e.g. a shared step counter in an optimizer state) pass through
+        unchanged — gating a node axis they don't have is ill-defined."""
+        n = active.shape[0]
+
+        def gate(new, old):
+            if new.ndim == 0 or new.shape[0] != n:
+                return new
+            a = active.reshape((n,) + (1,) * (new.ndim - 1))
+            return jnp.where(a, new, old.astype(new.dtype))
+
+        return jax.tree.map(gate, new_tree, old_tree)
+
+
+def resolve_faults(faults) -> "FaultPlan | None":
+    """``None`` for no-fault configs (including an explicitly null plan), so
+    engine code can guard the whole fault path with a static Python check and
+    keep the fault-free lowering byte-identical to the pre-fault program."""
+    if faults is None or faults.is_null:
+        return None
+    return faults

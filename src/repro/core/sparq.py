@@ -35,6 +35,7 @@ import numpy as np
 from repro.core import bits as bits_mod
 from repro.core import engine
 from repro.core.compression import Compressor, Identity
+from repro.core.faults import FaultPlan, resolve_faults
 from repro.core.schedule import LRSchedule, fixed
 from repro.core.topology import GossipPlan, Topology
 from repro.core.triggers import ThresholdSchedule, zero
@@ -86,6 +87,9 @@ class SparqConfig:
     optimizer: Optional[Optimizer] = None  # local-update rule; None -> sgd()
     plan: Optional[GossipPlan] = None      # time-varying gossip plan; wins
                                            # over (and excludes) topology=
+    faults: Optional[FaultPlan] = None     # link-drop / straggler / dropout
+                                           # injection (core/faults.py);
+                                           # None or a null plan = fault-free
 
     def resolved_plan(self) -> GossipPlan:
         """The communication plan this config runs: ``plan=`` verbatim, or
@@ -169,7 +173,12 @@ def make_step(cfg: SparqConfig, grad_fn: GradFn):
     Time-varying gossip: the whole plan support rides along as one stacked
     ``(R, n, n)`` device constant and the sync branch looks the active
     ``W_r`` (and its per-round degrees, for the bit accounting) up by
-    ``sync_rounds % R`` — the trajectory stays a single XLA program."""
+    ``sync_rounds % R`` — the trajectory stays a single XLA program.
+
+    Fault injection (core/faults.py): an active ``cfg.faults`` gates skipped
+    local steps per node, repairs the active ``W_r`` over the surviving
+    links, forces offline nodes' triggers off and charges bits only for live
+    links. A ``None``/null plan keeps the exact fault-free program."""
     plan = cfg.resolved_plan()
     n = plan.n
     R = plan.R
@@ -178,6 +187,9 @@ def make_step(cfg: SparqConfig, grad_fn: GradFn):
     comp = cfg.compressor
     opt = cfg.resolved_optimizer()
     H = int(cfg.H)
+    flt = resolve_faults(cfg.faults)
+    if flt is not None:
+        flt.validate_for(n)
 
     def payload_bits(d: int) -> float:
         return comp.bits(d)
@@ -191,6 +203,12 @@ def make_step(cfg: SparqConfig, grad_fn: GradFn):
         # local update through the pluggable optimizer seam (optim/sgd.py):
         # x^{t+1/2} = x^t - eta_t g  for SGD, momentum/Nesterov for SQuARM
         x_half, opt_new = opt.update(g, state.opt, state.x, eta)
+        if flt is not None:
+            # stragglers / offline nodes skip this local step: iterate AND
+            # optimizer buffers freeze (the node computed no gradient)
+            act = flt.step_mask(state.t, n)                   # (n,) bool
+            x_half = jnp.where(act[:, None], x_half, state.x)
+            opt_new = flt.gate_update(act, opt_new, state.opt)
 
         def sync_branch(_):
             # active round's graph: static plans (R == 1) bind W_0 directly
@@ -204,6 +222,11 @@ def make_step(cfg: SparqConfig, grad_fn: GradFn):
             diff = x_half - state.x_hat                       # (n, d)
             sq = jnp.sum(diff * diff, axis=-1)                # (n,)
             trig = trigger_mask(sq, c_t, eta)                 # (n,) bool
+            if flt is not None:
+                # faulty round: repaired W over the surviving links, offline
+                # nodes muted, bits charged for live links only
+                W_r, deg_r, live = flt.apply(W_r, state.t, state.sync_rounds)
+                trig = trig & live
             keys = jax.random.split(kc, n)
             q = jax.vmap(lambda v, k: comp(v, k))(diff, keys)
             q = q * trig[:, None].astype(q.dtype)             # line 11: send 0

@@ -45,7 +45,13 @@ def constant(c0: float) -> ThresholdSchedule:
 
 
 def poly(c0: float, eps: float = 0.5) -> ThresholdSchedule:
-    assert 0.0 < eps < 1.0
+    # ValueError, not assert: asserts vanish under `python -O`, and Theorem 1
+    # genuinely needs c_t ~ o(t) — eps outside (0, 1) silently breaks the
+    # convergence guarantee (eps <= 0 grows c_t at least linearly)
+    if not 0.0 < eps < 1.0:
+        raise ValueError(
+            f"poly threshold needs eps in (0, 1) (Theorem 1: c_t = c0 * "
+            f"t^(1-eps) must be o(t)), got eps={eps}")
     def fn(t):
         t = jnp.asarray(t, jnp.float32)
         return c0 * jnp.maximum(t, 1.0) ** (1.0 - eps)
@@ -54,6 +60,11 @@ def poly(c0: float, eps: float = 0.5) -> ThresholdSchedule:
 
 def piecewise(c0: float, step: float, every: int, until: int) -> ThresholdSchedule:
     """Section 5.2: start at c0, add `step` every `every` steps until t=until."""
+    if every < 1:
+        raise ValueError(f"piecewise threshold needs every >= 1 steps "
+                         f"between increments, got {every}")
+    if until < 0:
+        raise ValueError(f"piecewise threshold needs until >= 0, got {until}")
     def fn(t):
         t = jnp.asarray(t, jnp.float32)
         inc = jnp.minimum(t, float(until)) // float(every)
@@ -68,5 +79,9 @@ def should_trigger(x_half, x_hat, c_t, eta_t):
 
 
 def make_schedule(name: str, **kw) -> ThresholdSchedule:
-    return {"zero": zero, "constant": constant, "poly": poly,
-            "piecewise": piecewise}[name](**kw)
+    schedules = {"zero": zero, "constant": constant, "poly": poly,
+                 "piecewise": piecewise}
+    if name not in schedules:
+        raise ValueError(f"unknown threshold schedule {name!r}; "
+                         f"have {sorted(schedules)}")
+    return schedules[name](**kw)

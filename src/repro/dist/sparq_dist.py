@@ -52,6 +52,7 @@ import jax.numpy as jnp
 from repro.core import bits as bits_mod
 from repro.core.compression import (Compressor, TopFrac, compress_tree,
                                     tree_payload_bits)
+from repro.core.faults import FaultPlan, resolve_faults
 from repro.core.schedule import LRSchedule, decaying
 from repro.core.sparq import gossip_mix, sync_message_bits, trigger_mask
 from repro.core.topology import GossipPlan, Topology, circulant_row, make_plan
@@ -100,6 +101,11 @@ class DistSparqConfig:
                                              # are fine: the sync branch folds
                                              # a PRNG key from the step counter
     seed: int = 0                    # base PRNG seed for stochastic compressors
+    faults: Optional[FaultPlan] = None  # link-drop / straggler / dropout
+                                        # injection (core/faults.py); the
+                                        # fault stream is a pure function of
+                                        # (seed, t, sync_round), so it is
+                                        # IDENTICAL to the reference engine's
 
     def resolved_optimizer(self) -> Optimizer:
         return resolve_optimizer(self.optimizer, self.momentum,
@@ -227,11 +233,16 @@ def build_sparq(cfg, mesh, dcfg: DistSparqConfig
     k_b = max(1, min(BLOCK, int(math.ceil(dcfg.frac * BLOCK))))
     if dcfg.variant not in ("dense", "ring", "shift"):
         raise ValueError(f"unknown variant {dcfg.variant!r}")
+    flt = resolve_faults(dcfg.faults)
+    if flt is not None:
+        flt.validate_for(n)
     # circulant lowering: static circulant graphs decompose W x - x into
     # per-shift jnp.roll terms (collective-permutes along `node`); anything
-    # else — time-varying plans, irregular graphs, n <= 2 — runs dense
+    # else — time-varying plans, irregular graphs, n <= 2, or an active
+    # fault plan (the repaired per-round W is not circulant) — runs dense
     shift_row = (circulant_row(plan.ws[0])
                  if dcfg.variant in ("ring", "shift") and R == 1 and n > 2
+                 and flt is None
                  else None)
     shift_terms = ([(s, float(shift_row[s])) for s in range(1, n)
                     if shift_row[s] > 0.0]
@@ -339,6 +350,13 @@ def build_sparq(cfg, mesh, dcfg: DistSparqConfig
         # local update through the shared optimizer seam (optim/sgd.py):
         # plain SGD by default, heavyball/Nesterov for SQuARM-SGD
         x_half, opt_new = opt.update(grads, state["opt"], state["params"], eta)
+        if flt is not None:
+            # stragglers / offline nodes skip this local step: iterate AND
+            # optimizer buffers freeze (same step_mask stream as the
+            # reference engine — core/faults.py determinism contract)
+            act = flt.step_mask(state["t"], n)                   # (n,) bool
+            x_half = flt.gate_update(act, x_half, state["params"])
+            opt_new = flt.gate_update(act, opt_new, state["opt"])
 
         def sync_branch(op):
             xh, xe = op
@@ -351,6 +369,12 @@ def build_sparq(cfg, mesh, dcfg: DistSparqConfig
                 W_r, deg_r = Ws[r], degs[r]
             c_t = dcfg.threshold(state["t"])
             trig = trigger_mask(_node_sq_dist(xh, xe), c_t, eta)     # (n,)
+            if flt is not None:
+                # faulty round: repaired W over the surviving links, offline
+                # nodes muted, bits charged for live links only
+                W_r, deg_r, live = flt.apply(W_r, state["t"],
+                                             state["sync_rounds"])
+                trig = trig & live
             trigf = trig.astype(jnp.float32)
 
             if dcfg.use_kernel:

@@ -56,6 +56,22 @@ def _parse():
                     help="per-round edge keep-probability (--dynamic edges)")
     ap.add_argument("--topo-seed", type=int, default=0,
                     help="graph / plan sampling seed")
+    ap.add_argument("--link-drop", type=float, default=0.0,
+                    help="per-sync-round iid link-drop probability in [0, 1) "
+                         "(core/faults.py; surviving support is repaired "
+                         "doubly stochastic)")
+    ap.add_argument("--stragglers", default="",
+                    help="comma-separated node indices that straggle, e.g. "
+                         "'0,3' (skip --straggler-frac of local steps)")
+    ap.add_argument("--straggler-frac", type=float, default=0.5,
+                    help="fraction of local gradient steps each straggler "
+                         "skips (only with --stragglers)")
+    ap.add_argument("--dropout-window", action="append", default=[],
+                    metavar="NODE:START:END",
+                    help="take NODE fully offline for steps START <= t < "
+                         "END (repeatable)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="fault-stream PRNG seed (links + stragglers)")
     ap.add_argument("--momentum", type=float, default=0.0,
                     help="SQuARM-SGD momentum beta (0 = plain SPARQ)")
     ap.add_argument("--nesterov", action="store_true",
@@ -87,6 +103,7 @@ def main():
 
     from repro.checkpoint import ckpt
     from repro.configs.registry import get_config
+    from repro.core.faults import DropoutWindow, FaultPlan
     from repro.core.schedule import decaying
     from repro.core.triggers import constant
     from repro.data.synthetic import TokenPipeline
@@ -116,6 +133,29 @@ def main():
     cfg = dataclasses.replace(cfg, n_nodes=n_nodes)
     mesh = sh.train_mesh(prod_mesh, cfg)
 
+    try:
+        windows = tuple(
+            DropoutWindow(*(int(p) for p in spec.split(":")))
+            for spec in args.dropout_window)
+    except (TypeError, ValueError):
+        # TypeError: wrong field count; ValueError: non-integer field or an
+        # invalid window (DropoutWindow validates start < end)
+        raise SystemExit(
+            f"[train] --dropout-window needs integer NODE:START:END with "
+            f"START < END, got {args.dropout_window!r}")
+    try:
+        straggler_ids = tuple(
+            int(i) for i in args.stragglers.split(",") if i)
+    except ValueError:
+        raise SystemExit(
+            f"[train] --stragglers needs comma-separated integer node "
+            f"indices, got {args.stragglers!r}")
+    faults = FaultPlan(
+        link_drop=args.link_drop,
+        stragglers=straggler_ids,
+        straggler_frac=args.straggler_frac if args.stragglers else 0.0,
+        dropout=windows, seed=args.fault_seed)
+
     dcfg = DistSparqConfig(
         H=args.H, frac=args.frac, lr=decaying(args.lr, 100.0),
         threshold=constant(args.threshold), momentum=args.momentum,
@@ -123,7 +163,8 @@ def main():
         use_kernel=args.use_kernel,
         topology=args.topology, deg=args.deg, mixing=args.mixing,
         dynamic=args.dynamic, rounds=args.dynamic_rounds,
-        edge_frac=args.edge_frac, topo_seed=args.topo_seed)
+        edge_frac=args.edge_frac, topo_seed=args.topo_seed,
+        faults=faults)
     init_fn, train_step, state_specs, pshape = build_sparq(cfg, mesh, dcfg)
     n_params = sum(np.prod(l.shape) for l in jax.tree.leaves(pshape))
     plan = init_fn.plan   # the engine's own plan, not a re-resolution
@@ -131,6 +172,11 @@ def main():
           f"(~{n_params / 1e6:.1f}M params/node)")
     print(f"[train] gossip plan {plan.name} (R={plan.R}) "
           f"delta_eff={plan.delta_eff:.4f}")
+    if not faults.is_null:
+        print(f"[train] faults: link_drop={faults.link_drop} "
+              f"stragglers={faults.stragglers}@{faults.straggler_frac} "
+              f"dropout={[(w.node, w.start, w.end) for w in faults.dropout]} "
+              f"seed={faults.seed}")
     ssh = jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs,
                        is_leaf=lambda x: isinstance(x, P))
 

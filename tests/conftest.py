@@ -1,0 +1,16 @@
+"""Shared pytest wiring: the ``--regen-golden`` flag for the golden-trace
+regression harness (tests/test_golden_traces.py).
+
+Regenerating goldens is legitimate ONLY when a change is *supposed* to move
+the numerics (a new default, an algorithmic fix, a different accumulation
+order) — never to silence an unexplained diff. See the README "Testing"
+section for the policy.
+"""
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--regen-golden", action="store_true", default=False,
+        help="rewrite tests/golden/*.json from the current runs instead of "
+             "comparing against them (then commit the diff with an "
+             "explanation of why the numerics legitimately moved)")

@@ -1,0 +1,246 @@
+"""Fault-injection runtime invariants (core/faults.py).
+
+The load-bearing acceptance property: every repaired per-round mixing matrix
+is symmetric doubly stochastic on the surviving support — lazy repair folds
+each dropped edge's weight onto both endpoints' diagonals, so symmetry and
+unit row sums are preserved by construction for ANY base plan, drop rate,
+dropout window and round index. Plus behavioral pins for stragglers, dropout
+windows, live-link bit accounting and the null-plan fast path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core import baselines
+from repro.core.compression import SignTopK
+from repro.core.faults import DropoutWindow, FaultPlan, resolve_faults
+from repro.core.schedule import decaying
+from repro.core.sparq import SparqConfig, run
+from repro.core.topology import make_plan, make_topology
+from repro.core.triggers import constant, zero
+
+
+def _assert_repaired_ok(W, W_eff, deg_eff, atol=1e-6):
+    W_eff = np.asarray(W_eff, np.float64)
+    np.testing.assert_allclose(W_eff, W_eff.T, atol=atol)
+    np.testing.assert_allclose(W_eff.sum(0), 1.0, atol=atol)
+    np.testing.assert_allclose(W_eff.sum(1), 1.0, atol=atol)
+    assert (W_eff >= -atol).all()
+    off = W_eff - np.diag(np.diag(W_eff))
+    # support only shrinks: every surviving edge existed in the base round
+    base_off = np.asarray(W) - np.diag(np.diag(np.asarray(W)))
+    assert ((off > 0) <= (base_off > 0)).all()
+    # deg_eff counts exactly the surviving support
+    np.testing.assert_array_equal((off > 0).sum(1),
+                                  np.asarray(deg_eff).astype(int))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(4, 16), drop=st.floats(0.0, 0.9),
+       seed=st.integers(0, 10), r=st.integers(0, 5),
+       kind=st.sampled_from(["ring", "complete"]))
+def test_repaired_matrix_doubly_stochastic(n, drop, seed, r, kind):
+    """ACCEPTANCE: the repaired W_r is symmetric doubly stochastic on the
+    surviving support for any graph, drop rate, seed and round index."""
+    W = jnp.asarray(make_topology(kind, n).w, jnp.float32)
+    fp = FaultPlan(link_drop=drop, seed=seed)
+    W_eff, deg_eff, live = fp.apply(W, jnp.int32(r * 3), jnp.int32(r))
+    assert bool(live.all())
+    _assert_repaired_ok(W, W_eff, deg_eff)
+
+
+@settings(max_examples=10, deadline=None)
+@given(r=st.integers(0, 7), t=st.integers(0, 40))
+def test_repaired_matrix_with_dropout_and_dynamic_plan(r, t):
+    """Repair composes with a time-varying plan round and dropout windows:
+    the offline node's row collapses to e_i, its degree to 0, and the
+    result stays doubly stochastic."""
+    plan = make_plan("ring", 8, dynamic="matchings", rounds=4, seed=1)
+    W = jnp.asarray(plan.ws[r % plan.R], jnp.float32)
+    fp = FaultPlan(link_drop=0.25, dropout=(DropoutWindow(3, 10, 30),),
+                   seed=2)
+    W_eff, deg_eff, live = fp.apply(W, jnp.int32(t), jnp.int32(r))
+    _assert_repaired_ok(W, W_eff, deg_eff)
+    down = 10 <= t < 30
+    assert bool(live[3]) == (not down)
+    if down:
+        W_np = np.asarray(W_eff)
+        assert W_np[3, 3] == pytest.approx(1.0)
+        assert np.allclose(np.delete(W_np[3], 3), 0.0)
+        assert float(deg_eff[3]) == 0.0
+
+
+def test_repaired_matrix_doubly_stochastic_fixed_seeds():
+    """Fixed-seed sweep of the acceptance property so it also runs where
+    hypothesis is absent (tests/hypothesis_compat.py convention): rings,
+    complete graphs, expanders and a matchings plan round, three drop rates,
+    several rounds, with and without an offline node."""
+    mats = [jnp.asarray(make_topology("ring", 5).w, jnp.float32),
+            jnp.asarray(make_topology("complete", 8).w, jnp.float32),
+            jnp.asarray(make_topology("expander", 12, deg=4, seed=1).w,
+                        jnp.float32),
+            jnp.asarray(make_plan("ring", 8, dynamic="matchings", rounds=3,
+                                  seed=0).ws[1], jnp.float32)]
+    for W in mats:
+        n = W.shape[0]
+        for drop in (0.1, 0.5, 0.9):
+            for windows in ((), (DropoutWindow(0, 0, 100),)):
+                fp = FaultPlan(link_drop=drop, dropout=windows, seed=3)
+                for r in range(3):
+                    W_eff, deg_eff, live = fp.apply(
+                        W, jnp.int32(5 * r), jnp.int32(r))
+                    _assert_repaired_ok(W, W_eff, deg_eff)
+                    if windows:
+                        assert not bool(live[0])
+                        assert float(deg_eff[0]) == 0.0
+
+
+def test_fault_stream_deterministic_and_seed_dependent():
+    """Masks are pure functions of (seed, t, sync_round): identical draws on
+    repeat calls (the dist == reference contract) and different draws for a
+    different seed or round."""
+    a = FaultPlan(link_drop=0.5, seed=0)
+    b = FaultPlan(link_drop=0.5, seed=1)
+    m0 = np.asarray(a.link_mask(jnp.int32(4), 10))
+    np.testing.assert_array_equal(m0, np.asarray(a.link_mask(jnp.int32(4), 10)))
+    assert not np.array_equal(m0, np.asarray(a.link_mask(jnp.int32(5), 10)))
+    assert not np.array_equal(m0, np.asarray(b.link_mask(jnp.int32(4), 10)))
+    s = FaultPlan(stragglers=(0, 1, 2, 3), straggler_frac=0.5, seed=0)
+    sm = np.asarray(s.step_mask(jnp.int32(7), 4))
+    np.testing.assert_array_equal(sm, np.asarray(s.step_mask(jnp.int32(7), 4)))
+
+
+def test_straggler_skips_target_fraction_of_steps():
+    """Only listed nodes straggle, and they skip ~straggler_frac of steps."""
+    fp = FaultPlan(stragglers=(2,), straggler_frac=0.4, seed=0)
+    masks = np.stack([np.asarray(fp.step_mask(jnp.int32(t), 4))
+                      for t in range(400)])
+    assert masks[:, [0, 1, 3]].all()          # non-stragglers never skip
+    skipped = 1.0 - masks[:, 2].mean()
+    assert 0.3 < skipped < 0.5                # ~0.4 over 400 draws
+
+
+def test_null_plan_resolves_to_none_and_preserves_trajectory():
+    """A null FaultPlan must leave the engine on the exact fault-free path:
+    resolve_faults strips it, and the trajectory is bit-identical."""
+    assert resolve_faults(None) is None
+    assert resolve_faults(FaultPlan()) is None
+    assert resolve_faults(FaultPlan(stragglers=(1, 2))) is None  # frac == 0
+    assert resolve_faults(FaultPlan(link_drop=0.1)) is not None
+
+    topo = make_topology("ring", 6)
+    b = jax.random.normal(jax.random.PRNGKey(1), (6, 10))
+
+    def grad_fn(x, t, k):
+        return x - b
+
+    kw = dict(topology=topo, compressor=SignTopK(k=4),
+              threshold=constant(1.0), lr=decaying(1.0, 50.0), H=2, gamma=0.3)
+    st_clean, _ = run(SparqConfig(**kw), grad_fn, jnp.zeros(10), 20,
+                      jax.random.PRNGKey(0))
+    st_null, _ = run(SparqConfig(faults=FaultPlan(), **kw), grad_fn,
+                     jnp.zeros(10), 20, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(st_clean.x),
+                                  np.asarray(st_null.x))
+    assert float(st_clean.bits) == float(st_null.bits)
+
+
+def test_dropout_window_freezes_node_then_rejoins():
+    """An offline node's iterate is frozen for the whole window (no local
+    steps, zero gossip drift) and moves again after rejoin."""
+    topo = make_topology("ring", 4)
+    b = jax.random.normal(jax.random.PRNGKey(2), (4, 8))
+
+    def grad_fn(x, t, k):
+        return x - b
+
+    fp = FaultPlan(dropout=(DropoutWindow(1, 4, 12),), seed=0)
+    cfg = SparqConfig(topology=topo, compressor=SignTopK(k=4),
+                      threshold=zero(), lr=decaying(1.0, 50.0), H=2,
+                      gamma=0.3, faults=fp)
+    from repro.core.sparq import init_state, make_step
+    step = jax.jit(make_step(cfg, grad_fn))
+    state = init_state(jnp.zeros(8), 4)
+    key = jax.random.PRNGKey(0)
+    snap = {}
+    for t in range(16):
+        key, sub = jax.random.split(key)
+        state = step(state, sub)
+        snap[t + 1] = np.asarray(state.x[1]).copy()
+    # frozen across the window [4, 12): x_1 after step 5..12 equals x_1 at 4
+    for t in range(5, 13):
+        np.testing.assert_array_equal(snap[t], snap[4])
+    assert not np.array_equal(snap[13], snap[12])   # rejoined and moving
+
+
+def test_faulty_bits_charge_only_live_links():
+    """Bit totals under link drop land strictly between zero and the clean
+    run's, and a zero-threshold run's totals follow the surviving-degree sum
+    exactly (flag + payload per live link)."""
+    topo = make_topology("ring", 6)
+    b = jax.random.normal(jax.random.PRNGKey(3), (6, 10))
+
+    def grad_fn(x, t, k):
+        return x - b
+
+    kw = dict(topology=topo, compressor=SignTopK(k=4), threshold=zero(),
+              lr=decaying(1.0, 50.0), H=2, gamma=0.3)
+    fp = FaultPlan(link_drop=0.4, seed=1)
+    st_c, _ = run(SparqConfig(**kw), grad_fn, jnp.zeros(10), 30,
+                  jax.random.PRNGKey(0))
+    st_f, _ = run(SparqConfig(faults=fp, **kw), grad_fn, jnp.zeros(10), 30,
+                  jax.random.PRNGKey(0))
+    assert 0 < float(st_f.bits) < float(st_c.bits)
+    # reconstruct the exact expected total from the fault stream: all nodes
+    # trigger (zero threshold), payload = SignTopK(k=4).bits(10), plus the
+    # 1-bit flag, per live link of each of the 15 sync rounds
+    W = jnp.asarray(topo.w, jnp.float32)
+    payload = SignTopK(k=4).bits(10) + 1.0
+    expect = 0.0
+    for r in range(15):
+        _, deg_eff, _ = fp.apply(W, jnp.int32(2 * r + 1), jnp.int32(r))
+        expect += float(np.sum(np.asarray(deg_eff))) * payload
+    assert float(st_f.bits) == pytest.approx(expect, rel=1e-6)
+
+
+def test_vanilla_baseline_under_faults():
+    """The vanilla baseline accepts the same FaultPlan: bits drop with the
+    links and the trajectory still contracts toward consensus."""
+    topo = make_topology("ring", 6)
+    b = jax.random.normal(jax.random.PRNGKey(4), (6, 10))
+
+    def grad_fn(x, t, k):
+        return x - b
+
+    lr = decaying(1.0, 50.0)
+    fp = FaultPlan(link_drop=0.3, stragglers=(0,), straggler_frac=0.5, seed=2)
+    out = {}
+    for name, faults in (("clean", None), ("faulty", fp)):
+        step = baselines.make_vanilla_step(topo, lr, grad_fn, faults=faults)
+        state = baselines.init_vanilla(jnp.zeros(10), 6)
+        st, _ = baselines.run_generic(step, state, 30, jax.random.PRNGKey(0))
+        out[name] = st
+    assert 0 < float(out["faulty"].bits) < float(out["clean"].bits)
+    spread = np.asarray(out["faulty"].x).std(axis=0).max()
+    assert np.isfinite(spread)
+
+
+def test_fault_plan_validation():
+    """Config errors are actionable ValueErrors (never bare asserts)."""
+    with pytest.raises(ValueError, match="link_drop"):
+        FaultPlan(link_drop=1.0)
+    with pytest.raises(ValueError, match="straggler_frac"):
+        FaultPlan(stragglers=(0,), straggler_frac=1.5)
+    with pytest.raises(ValueError, match="stragglers"):
+        FaultPlan(straggler_frac=0.5)
+    with pytest.raises(ValueError, match="start < end"):
+        FaultPlan(dropout=(DropoutWindow(0, 8, 8),))
+    with pytest.raises(ValueError, match="out of range"):
+        FaultPlan(stragglers=(7,), straggler_frac=0.1).validate_for(4)
+    with pytest.raises(ValueError, match="out of range"):
+        FaultPlan(dropout=((5, 0, 10),)).validate_for(4)
+    # tuple shorthand coerces to DropoutWindow
+    fp = FaultPlan(dropout=((1, 0, 10),))
+    assert fp.dropout[0] == DropoutWindow(1, 0, 10)

@@ -1,0 +1,145 @@
+"""Threshold-schedule and trigger-rule invariants (core/triggers.py).
+
+Property tests for the c_t schedules the event trigger runs on — both
+monotonicity claims the theory leans on (c_t non-decreasing keeps the
+trigger meaningful as eta_t^2 decays) and the documented reductions
+(``zero`` + H=1 is CHOCO: the trigger mask is all-ones whenever any update
+happened). Plus the `python -O` regression net for ``make_schedule``:
+schedule validation must be real ValueErrors, never bare asserts (the exact
+bug class PR 4 fixed in topology — ``poly``'s eps check was an assert until
+this module pinned it).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core.compression import SignTopK
+from repro.core.schedule import decaying
+from repro.core.sparq import SparqConfig, run
+from repro.core.topology import make_topology
+from repro.core.triggers import (make_schedule, piecewise, poly,
+                                 should_trigger, zero)
+
+
+# ------------------------------------------------------- schedule properties
+
+@settings(max_examples=30, deadline=None)
+@given(c0=st.floats(0.1, 1e4), eps=st.floats(0.01, 0.99),
+       t=st.integers(0, 10_000), dt=st.integers(1, 1_000))
+def test_poly_non_decreasing(c0, eps, t, dt):
+    sch = poly(c0, eps)
+    assert float(sch(t + dt)) >= float(sch(t)) - 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(c0=st.floats(0.0, 100.0), step=st.floats(0.0, 100.0),
+       every=st.integers(1, 200), until=st.integers(0, 5_000),
+       t=st.integers(0, 10_000), dt=st.integers(1, 1_000))
+def test_piecewise_non_decreasing_and_freezes(c0, step, every, until, t, dt):
+    sch = piecewise(c0, step, every=every, until=until)
+    assert float(sch(t + dt)) >= float(sch(t)) - 1e-6
+    # frozen after `until`: every later step sees the same threshold
+    frozen = float(sch(until))
+    assert float(sch(until + dt)) == pytest.approx(frozen)
+
+
+def test_schedules_non_decreasing_fixed_grid():
+    """Fixed-grid sweep of the monotonicity/freeze properties so they also
+    run without hypothesis (tests/hypothesis_compat.py convention)."""
+    ts = np.arange(0, 3000, 7)
+    for sch in (poly(5.0, 0.3), poly(100.0, 0.9),
+                piecewise(2.0, 1.5, every=50, until=1000),
+                piecewise(0.0, 10.0, every=1, until=500)):
+        vals = np.array([float(sch(t)) for t in ts])
+        assert (np.diff(vals) >= -1e-6).all(), sch.name
+    pw = piecewise(2.0, 1.5, every=50, until=1000)
+    frozen = float(pw(1000))
+    for t in (1001, 1500, 10_000):
+        assert float(pw(t)) == pytest.approx(frozen)
+
+
+def test_zero_and_h1_reduces_to_choco_all_ones_mask():
+    """The CHOCO reduction the ``zero`` docstring claims: with c_t = 0 and
+    H = 1 every node triggers at every sync index (the mask is all-ones), so
+    the trigger count is exactly n * T."""
+    n, d, T = 5, 12, 18
+    topo = make_topology("ring", n)
+    b = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+
+    def grad_fn(x, t, k):
+        return x - b
+
+    cfg = SparqConfig(topology=topo, compressor=SignTopK(k=4),
+                      threshold=zero(), lr=decaying(1.0, 50.0), H=1,
+                      gamma=0.3)
+    st_, _ = run(cfg, grad_fn, jnp.zeros(d), T, jax.random.PRNGKey(1))
+    assert int(st_.sync_rounds) == T
+    assert int(st_.triggers) == n * T
+
+
+def test_should_trigger_at_zero_threshold_iff_update_nonzero():
+    """At c_t = 0 the squared-norm trigger fires iff x_half != x_hat — the
+    boundary case ||diff|| = 0 must NOT fire (> is strict: an unchanged
+    node has nothing to send even with the trigger disabled)."""
+    x = jnp.array([1.0, -2.0, 3.0])
+    assert bool(should_trigger(x, x - 1e-3, 0.0, 0.1))
+    assert not bool(should_trigger(x, x, 0.0, 0.1))
+    # ...and with a positive threshold the strict inequality still holds at
+    # the exact boundary ||diff||^2 == c_t eta^2
+    eta = 0.5
+    diff = jnp.array([1.0, 0.0, 0.0])
+    c_boundary = float(jnp.sum(diff * diff)) / (eta * eta)
+    assert not bool(should_trigger(x + diff, x, c_boundary, eta))
+
+
+# ------------------------------------------------------------- validation
+
+def test_poly_rejects_bad_eps_with_value_error():
+    for eps in (0.0, 1.0, -0.5, 1.5):
+        with pytest.raises(ValueError, match="eps"):
+            poly(1.0, eps)
+
+
+def test_piecewise_rejects_bad_knobs():
+    with pytest.raises(ValueError, match="every"):
+        piecewise(1.0, 1.0, every=0, until=100)
+    with pytest.raises(ValueError, match="until"):
+        piecewise(1.0, 1.0, every=10, until=-1)
+
+
+def test_make_schedule_rejects_unknown_name():
+    with pytest.raises(ValueError, match="unknown threshold schedule"):
+        make_schedule("exponential")
+    assert make_schedule("poly", c0=2.0, eps=0.5).name.startswith("poly")
+
+
+def test_schedule_validation_survives_python_O():
+    """`python -O` strips assert statements; make_schedule's validation must
+    be real exceptions (poly's eps check was a bare assert until this test —
+    the exact bug class PR 4 fixed in topology.validate)."""
+    script = (
+        "from repro.core.triggers import make_schedule\n"
+        "for bad in (lambda: make_schedule('poly', c0=1.0, eps=1.5),\n"
+        "            lambda: make_schedule('poly', c0=1.0, eps=0.0),\n"
+        "            lambda: make_schedule('piecewise', c0=1.0, step=1.0,\n"
+        "                                  every=0, until=10),\n"
+        "            lambda: make_schedule('nope')):\n"
+        "    try:\n"
+        "        bad()\n"
+        "    except ValueError:\n"
+        "        pass\n"
+        "    else:\n"
+        "        raise SystemExit('schedule validation vanished under -O')\n"
+        "print('OK')\n")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH=os.path.join(root, "src"))
+    r = subprocess.run([sys.executable, "-O", "-c", script], env=env,
+                       capture_output=True, text=True, timeout=120)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout
