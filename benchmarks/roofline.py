@@ -1,11 +1,20 @@
 """Aggregate the dry-run JSON artifacts (results/dryrun_*.json) into the
 EXPERIMENTS.md §Roofline table: per (arch x shape x mesh) the three terms,
-dominant bottleneck, MODEL_FLOPS/HLO_FLOPs ratio, and footprint."""
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs ratio, and footprint.
+
+When no artifacts exist the suite generates its own: it shells out to
+``python -m repro.launch.dryrun`` (subprocess — the dryrun needs its 512
+simulated-device XLA flag set before jax initializes, which is impossible
+in an already-initialized bench process) for one representative arch over
+the train and decode shapes, with ``--lint`` so the rows carry the
+repro.analysis verdict alongside the roofline terms."""
 from __future__ import annotations
 
 import glob
 import json
 import os
+import subprocess
+import sys
 from typing import Dict, List
 
 RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
@@ -67,12 +76,47 @@ def table(rows: List[Dict], mesh: str = "16x16") -> str:
     return "\n".join(out)
 
 
+CI_ARCH = "qwen1.5-0.5b"
+CI_SHAPES = ("train_4k", "decode_32k")
+
+
+def ensure_artifacts(quick: bool = True, arch: str = CI_ARCH,
+                     timeout_s: int = 900) -> List[str]:
+    """Generate results/dryrun_ci_*.json via the real dryrun lowering when no
+    dry-run artifacts exist yet. Returns the paths it wrote (empty when
+    artifacts were already present)."""
+    if glob.glob(os.path.join(RESULTS_DIR, "dryrun_*.json")):
+        return []
+    root = os.path.dirname(RESULTS_DIR)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    env.pop("XLA_FLAGS", None)  # dryrun sets its own 512-device flag
+    shapes = CI_SHAPES if quick else ("train_4k", "prefill_32k", "decode_32k")
+    written = []
+    for shape in shapes:
+        out = os.path.join(RESULTS_DIR, f"dryrun_ci_{shape}.json")
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--lint", "--out", out]
+        try:
+            subprocess.run(cmd, cwd=root, env=env, timeout=timeout_s,
+                           check=True, stdout=subprocess.DEVNULL,
+                           stderr=subprocess.STDOUT)
+            written.append(out)
+        except (subprocess.SubprocessError, OSError) as e:
+            print(f"[roofline] dryrun {arch}/{shape} failed: {e}",
+                  flush=True)
+    return written
+
+
 def run_bench(quick: bool = True) -> List[Dict]:
-    """Benchmark-harness entry: summarizes whatever dry-run artifacts exist."""
+    """Benchmark-harness entry: summarizes the dry-run artifacts, generating
+    them through the real dryrun lowering when none exist."""
+    generated = ensure_artifacts(quick)
     rows = load_rows()
     ok = [r for r in rows if r.get("ok")]
     summary = []
     for r in ok:
+        lint = r.get("lint")
         summary.append({
             "name": f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
             "us_per_call": round(max(r["compute_s"], r["memory_s"],
@@ -81,10 +125,16 @@ def run_bench(quick: bool = True) -> List[Dict]:
             "compute_s": f"{r['compute_s']:.3e}",
             "memory_s": f"{r['memory_s']:.3e}",
             "collective_s": f"{r['collective_s']:.3e}",
+            "hlo_flops_per_device": r.get("hlo_flops_per_device"),
+            "hlo_bytes_per_device": r.get("hlo_bytes_per_device"),
+            "collective_bytes_per_device":
+                r.get("collective_bytes_per_device"),
+            "lint_errors": lint.get("errors") if lint else None,
+            "generated_here": bool(generated),
         })
     if not summary:
         summary.append({"name": "roofline_no_artifacts", "us_per_call": 0,
-                        "note": "run src/repro/launch/dryrun.py first"})
+                        "note": "dryrun generation failed; see log above"})
     return summary
 
 

@@ -1,0 +1,17 @@
+"""repro.analysis — static audit of the compiled training/serve programs.
+
+Inspects jaxprs and optimized HLO of the real programs without executing
+them (plus two cheap executions for the retrace gate) and enforces the
+R1-R5 rule catalog in :mod:`repro.analysis.rules`. Run it as
+
+    PYTHONPATH=src python -m repro.analysis --config ring --engine both
+
+which audits the same lowered programs ``launch/dryrun.py`` builds and
+writes ``results/ANALYSIS.json``.
+"""
+from repro.analysis.rules import (ERROR, INFO, RULES, WARNING, Finding,
+                                  Report, Rule, apply_suppressions,
+                                  dump_report, finding, render_report)
+
+__all__ = ["ERROR", "INFO", "WARNING", "RULES", "Rule", "Finding", "Report",
+           "finding", "apply_suppressions", "render_report", "dump_report"]

@@ -1,0 +1,244 @@
+"""CLI for the static audit: ``python -m repro.analysis``.
+
+Builds the SAME lowered programs the launch stack builds — the chunked-scan
+engine runner (`core/engine.make_runner` over a `core/sparq.make_step`
+program) and the SPMD dist step (`dist/sparq_dist.build_sparq`, jitted with
+the production sharding/donation flags exactly as `launch/dryrun.py` and
+`launch/train.py` do) — and runs the R1-R5 rule catalog over their jaxprs
+and optimized HLO. Nothing heavy executes: the HLO rules read AOT-compiled
+artifacts, and only the retrace gate (R3) runs the programs (twice, on
+reduced shapes, by design — that is what it measures).
+
+Exit status 0 iff zero unsuppressed errors; findings land in
+``results/ANALYSIS.json`` (``--out``) for review-time diffing.
+"""
+import os
+
+# Before ANY jax import: the dist audit shards over 8 simulated host devices
+# (jax locks the device count at first backend init, the same reason
+# launch/dryrun.py sets its flag at the very top).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import dataclasses
+import sys
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import hlo_lint, jaxpr_lint
+from repro.analysis.rules import (Report, apply_suppressions,
+                                  default_suppressions, dump_report,
+                                  render_report)
+
+CORE_N = 8          # nodes in the core-engine audit ensemble
+CORE_D = 64 * 1024  # (CORE_N, CORE_D) f32 = 2 MB per carry leaf: over the
+                    # R1 threshold so a dropped donation is a hard error
+
+
+def _leaf_labels(tree) -> List[str]:
+    return [jax.tree_util.keystr(kp)
+            for kp, _ in jax.tree_util.tree_leaves_with_path(tree)]
+
+
+def audit_core(topo_kind: str, steps: int) -> Report:
+    from repro.core import engine as engine_mod
+    from repro.core import sparq
+    from repro.core.compression import TopFrac
+    from repro.core.schedule import decaying, fixed
+    from repro.core.topology import make_topology
+
+    report = Report(program="core/make_runner",
+                    meta={"topology": topo_kind, "n": CORE_N, "d": CORE_D,
+                          "T": steps, "backend": jax.default_backend()})
+    cfg = sparq.SparqConfig(topology=make_topology(topo_kind, CORE_N),
+                            compressor=TopFrac(0.25),
+                            threshold=decaying(1.0, 10.0),
+                            lr=fixed(0.05), H=2, gamma=0.3, momentum=0.9)
+    step = sparq.make_step(cfg, lambda x, t, key: x)  # grad of 0.5*||x||^2
+    key = jax.random.PRNGKey(0)
+
+    def make_state():
+        return cfg.init_state(jnp.zeros((CORE_N, CORE_D), jnp.float32))
+
+    state0 = make_state()
+    runner = engine_mod.make_runner(
+        step, steps, record_every=max(steps // 2, 1),
+        eval_fn=lambda x: jnp.mean(x * x))
+
+    # R3 first: the runner's own trace counter must stay at 1 over repeat
+    # calls (fresh states each call — the carry is donated).
+    report.extend(jaxpr_lint.audit_retrace(
+        lambda: runner(make_state(), key), runner.trace_count,
+        program=report.program))
+
+    # R2 on the step jaxpr (the scanned body — where a silent promotion
+    # would multiply by T) plus the runner carry contract.
+    closed = jax.make_jaxpr(step)(state0, key)
+    report.extend(jaxpr_lint.lint_dtypes(closed, program="core/make_step"))
+    report.extend(jaxpr_lint.lint_weak_scalars(closed,
+                                               program="core/make_step"))
+    out_sds = jax.eval_shape(step, state0, key)
+    report.extend(jaxpr_lint.lint_carry_dtypes(
+        jax.tree.leaves(state0), jax.tree.leaves(out_sds),
+        labels=_leaf_labels(state0), program="core/make_step"))
+
+    # R1/R4 on the optimized HLO of the full T-step runner program.
+    hlo = runner.lower(state0, key).compile().as_text()
+    n_state = len(jax.tree.leaves(state0))  # donated carry leaves are entry
+    report.extend(hlo_lint.lint_donation(    # params 0..n_state-1 (pytree
+        hlo, range(n_state), program=report.program))  # flatten order)
+    report.extend(hlo_lint.lint_transfers(hlo, program=report.program))
+    report.meta["entry_params"] = len(hlo_walk_params(hlo))
+    report.meta["donated_params"] = n_state
+    return report
+
+
+def hlo_walk_params(hlo: str):
+    from repro.launch import hlo_walk
+    return hlo_walk.entry_parameters(hlo)
+
+
+def audit_dist(variant: str, arch: str, use_kernel: bool) -> Report:
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs.registry import get_config
+    from repro.dist import sharding as sh
+    from repro.dist.sparq_dist import DistSparqConfig, build_sparq
+
+    report = Report(program="dist/train_step",
+                    meta={"variant": variant, "arch": arch,
+                          "use_kernel": use_kernel,
+                          "backend": jax.default_backend()})
+    cfg = dataclasses.replace(get_config(arch).reduced(), n_nodes=4)
+    prod = jax.make_mesh((4, 2), ("data", "model"))
+    mesh = sh.train_mesh(prod, cfg)
+    dcfg = DistSparqConfig(H=2, variant=variant, frac=0.25,
+                           use_kernel=use_kernel)
+    init_fn, train_step, state_specs, _ = build_sparq(cfg, mesh, dcfg)
+    report.meta["interpret"] = train_step.interpret
+
+    state_sds = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+    n_nodes, per_node, seq = train_step.n_nodes, 2, 32
+    batch_sds = {k: jax.ShapeDtypeStruct((n_nodes, per_node, seq), jnp.int32)
+                 for k in ("tokens", "labels")}
+    ssh = jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs,
+                       is_leaf=lambda x: isinstance(x, P))
+    bsh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                       sh.train_batch_specs(batch_sds, mesh),
+                       is_leaf=lambda x: isinstance(x, P))
+
+    # No `with mesh:` anywhere below — launch/train.py runs the step without
+    # a mesh context, and the context is part of the trace-cache key: mixing
+    # a mesh-scoped lower with context-free execution double-traces (that is
+    # precisely the drift R3 exists to catch).
+    counted = jaxpr_lint.TraceCounter(train_step)
+    jstep = jax.jit(counted, in_shardings=(ssh, bsh), donate_argnums=(0,))
+    lowered = jstep.lower(state_sds, batch_sds)
+    compiled = lowered.compile()
+    hlo = compiled.as_text()
+
+    # R1: the donated state leaves are the leading entry params (jit
+    # flattens (state, batch) in pytree order, state first).
+    n_state = len(jax.tree.leaves(state_sds))
+    report.extend(hlo_lint.lint_donation(hlo, range(n_state),
+                                         program=report.program))
+    # R4 / R5 on the same optimized module.
+    report.extend(hlo_lint.lint_transfers(hlo, program=report.program))
+    report.extend(hlo_lint.lint_pallas(hlo, use_kernel=train_step.use_kernel,
+                                       interpret=train_step.interpret,
+                                       program=report.program))
+
+    # R2 on the dist jaxpr + state carry contract ((state, metrics) out).
+    closed = jax.make_jaxpr(train_step)(state_sds, batch_sds)
+    report.extend(jaxpr_lint.lint_dtypes(closed, program=report.program))
+    report.extend(jaxpr_lint.lint_weak_scalars(closed,
+                                               program=report.program))
+    out_state, _metrics = jax.eval_shape(train_step, state_sds, batch_sds)
+    report.extend(jaxpr_lint.lint_carry_dtypes(
+        jax.tree.leaves(state_sds), jax.tree.leaves(out_state),
+        labels=_leaf_labels(state_sds), program=report.program))
+
+    # R3: two real (reduced-shape) executions through the SAME jit wrapper;
+    # the .lower() above primed the trace, so the count must still be 1.
+    state = jax.device_put(init_fn(jax.random.PRNGKey(0)), ssh)
+    rng = np.random.default_rng(0)
+    batch = jax.device_put(
+        {k: rng.integers(0, cfg.vocab_size,
+                         (n_nodes, per_node, seq)).astype(np.int32)
+         for k in ("tokens", "labels")}, bsh)
+    state, _ = jstep(state, batch)
+    state, _ = jstep(state, batch)
+    if counted.count != 1:
+        report.extend(jaxpr_lint.audit_retrace(
+            lambda: None, counted, calls=0, program=report.program))
+    report.meta["traces"] = counted.count
+    report.meta["donated_params"] = n_state
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static audit (R1-R5) of the lowered train programs.")
+    ap.add_argument("--config", default="ring",
+                    help="gossip topology/variant: ring|torus2d|complete|"
+                         "expander (core); ring maps to the ring variant, "
+                         "anything else to dense, for dist")
+    ap.add_argument("--engine", default="both",
+                    choices=["core", "dist", "both"])
+    ap.add_argument("--arch", default="qwen1.5-0.5b",
+                    help="dist model arch (reduced variant is audited)")
+    ap.add_argument("--steps", type=int, default=8,
+                    help="core-engine trajectory length (kept tiny: the "
+                         "audit reads artifacts, it does not benchmark)")
+    ap.add_argument("--no-kernel", action="store_true",
+                    help="audit the dist step without the Pallas kernel "
+                         "path (R5 then has nothing to check)")
+    ap.add_argument("--out", default=None,
+                    help="write ANALYSIS.json here (default: print summary "
+                         "only)")
+    args = ap.parse_args(argv)
+
+    reports: List[Report] = []
+    if args.engine in ("core", "both"):
+        print(f"[analysis] auditing core/make_runner "
+              f"(topology={args.config}, n={CORE_N}, d={CORE_D})",
+              flush=True)
+        reports.append(audit_core(args.config, args.steps))
+    if args.engine in ("dist", "both"):
+        variant = "ring" if args.config == "ring" else "dense"
+        print(f"[analysis] auditing dist/train_step (variant={variant}, "
+              f"arch={args.arch}, kernel={not args.no_kernel})", flush=True)
+        reports.append(audit_dist(variant, args.arch,
+                                  use_kernel=not args.no_kernel))
+
+    suppressions = default_suppressions(jax.default_backend())
+    for r in reports:
+        apply_suppressions(r.findings, suppressions)
+
+    doc = render_report(reports, suppressions,
+                        extra={"jax_version": jax.__version__,
+                               "backend": jax.default_backend(),
+                               "argv": vars(args)})
+    for r in reports:
+        c = r.counts()
+        print(f"[analysis] {r.program}: {c['errors']} error(s), "
+              f"{c['warnings']} warning(s), {c['suppressed']} suppressed",
+              flush=True)
+        for f in r.findings:
+            tag = "suppressed" if f.suppressed else f.severity.upper()
+            print(f"  [{f.rule_id}/{tag}] {f.message}"
+                  + (f"  ({f.location})" if f.location else ""), flush=True)
+    if args.out:
+        dump_report(doc, args.out)
+        print(f"[analysis] wrote {args.out}", flush=True)
+    ok = bool(doc["ok"])
+    print(f"[analysis] {'OK' if ok else 'FAIL'}", flush=True)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,175 @@
+"""Optimized-HLO lint: donation aliasing (R1), hidden transfers (R4),
+interpret-mode Pallas leaks (R5).
+
+All rules operate on ``compiled.as_text()`` — the post-optimization module
+XLA actually executes — via :mod:`repro.launch.hlo_walk`'s parser, so what
+is audited is what runs, not what was requested at trace time.
+"""
+from __future__ import annotations
+
+import re
+from typing import Iterable, List, Optional, Sequence, Set
+
+from repro.analysis.rules import Finding, finding
+from repro.launch import hlo_walk
+
+MB = 1024 * 1024
+DONATION_THRESHOLD_BYTES = 1 * MB
+
+# R4: ops that move data off-device or re-enter python from inside the
+# compiled program. `custom-call` is NOT flagged wholesale — XLA lowers
+# library math (TopK, cholesky, ...) to internal custom-calls on CPU; only
+# callback-shaped targets count.
+_TRANSFER_OPS = ("infeed", "outfeed", "send", "send-done",
+                 "recv", "recv-done", "copy-start")
+_CALLBACK_TARGET_RE = re.compile(
+    r'custom_call_target="([^"]*(?:callback|py_func|PjRt[^"]*[Hh]ost)[^"]*)"')
+# opcode = first lowercase word followed by '(' — the result type that
+# precedes it may be a (nested) tuple (infeed/copy-start return tuples), so
+# matching "the word after the type" is not an option; HLO type text never
+# contains a lowercase-word-then-paren (layout annotations are `S(..)`,
+# uppercase), so the leftmost such word IS the opcode.
+_OP_RE = re.compile(r"\s([a-z][a-z0-9\-]*)\(")
+
+
+def _op_of(line: str) -> str:
+    m = _OP_RE.search(line)
+    return m.group(1) if m else ""
+
+
+def lint_donation(hlo: str, donated_params: Sequence[int], *,
+                  threshold_bytes: int = DONATION_THRESHOLD_BYTES,
+                  program: str = "") -> List[Finding]:
+    """R1: every donated entry parameter above ``threshold_bytes`` must
+    appear in the module's ``input_output_alias`` map.
+
+    ``donated_params`` are entry-parameter numbers of the donated argument's
+    flattened leaves (for ``donate_argnums=(0,)`` and a pytree first arg,
+    that is ``range(n_state_leaves)`` — jit flattens args in pytree order).
+    XLA drops an alias silently (plus a UserWarning at compile) when dtype or
+    layout of the paired output drifts; this turns that into a hard error.
+    """
+    out: List[Finding] = []
+    aliases = hlo_walk.parse_alias_map(hlo)
+    aliased_params: Set[int] = {pnum for pnum, _, _ in aliases.values()}
+    params = hlo_walk.entry_parameters(hlo)
+    if donated_params and not aliases:
+        out.append(finding(
+            "R1",
+            "module has donated parameters but no input_output_alias "
+            "attribute at all — every donation was dropped at compile",
+            location=program))
+        return out
+    for pnum in donated_params:
+        if pnum in aliased_params:
+            continue
+        if pnum < len(params):
+            dtype, dims = params[pnum]
+            size = hlo_walk.parameter_bytes(dtype, dims)
+        else:
+            dtype, dims, size = "unknown", [], threshold_bytes
+        if size >= threshold_bytes:
+            out.append(finding(
+                "R1",
+                f"donated parameter {pnum} ({dtype}{dims}, "
+                f"{size / MB:.1f} MB) is not output-aliased: the buffer is "
+                f"copied every call instead of updated in place",
+                location=program))
+    return out
+
+
+def lint_transfers(hlo: str, *, program: str = "",
+                   scope: Optional[Iterable[str]] = None) -> List[Finding]:
+    """R4: host callbacks / infeed / outfeed / send / recv / device->host
+    copy-start inside (or reachable from) any while body.
+
+    ``scope`` overrides the audited computation set (defaults to
+    :func:`hlo_walk.while_reachable`); pass all computations to audit a
+    program with no scan."""
+    out: List[Finding] = []
+    bodies = hlo_walk.computation_bodies(hlo)
+    names = set(scope) if scope is not None else hlo_walk.while_reachable(hlo)
+    for name in sorted(names):
+        for line in bodies.get(name, ()):
+            op = _op_of(line)
+            if op in _TRANSFER_OPS:
+                # copy-start only matters when it crosses memory spaces
+                # (S(5)/pinned_host annotations); a plain on-device
+                # copy-start is latency hiding, not a transfer.
+                if op == "copy-start" and "S(" not in line:
+                    continue
+                out.append(finding(
+                    "R4",
+                    f"`{op}` inside while-reachable computation `{name}`: "
+                    f"the scanned body round-trips through the host every "
+                    f"iteration",
+                    location=f"{program} {name}".strip()))
+            elif op == "custom-call":
+                cm = _CALLBACK_TARGET_RE.search(line)
+                if cm:
+                    out.append(finding(
+                        "R4",
+                        f"host-callback custom-call `{cm.group(1)}` inside "
+                        f"while-reachable computation `{name}`: a python "
+                        f"callback serializes the scan on host calls",
+                        location=f"{program} {name}".strip()))
+    return out
+
+
+def run_lint(hlo: str, donated_params: Sequence[int] = (), *,
+             use_kernel: bool = False, interpret: bool = False,
+             program: str = "") -> dict:
+    """``--lint`` entry for the launch drivers: run the HLO-level rules over
+    a freshly compiled module, print findings, and return a JSON-able
+    ``{"errors": n, "findings": [...]}`` summary. Suppressions follow the
+    backend (``rules.default_suppressions``)."""
+    import jax
+
+    from repro.analysis.rules import apply_suppressions, default_suppressions
+    findings = lint_module(hlo, donated_params, use_kernel=use_kernel,
+                           interpret=interpret, program=program)
+    apply_suppressions(findings, default_suppressions(jax.default_backend()))
+    errors = [f for f in findings
+              if f.severity == "error" and not f.suppressed]
+    for f in findings:
+        tag = "suppressed" if f.suppressed else f.severity.upper()
+        print(f"  [lint {f.rule_id}/{tag}] {f.message}", flush=True)
+    return {"errors": len(errors),
+            "findings": [f.to_dict() for f in findings]}
+
+
+def lint_module(hlo: str, donated_params: Sequence[int] = (), *,
+                use_kernel: bool = False, interpret: bool = False,
+                threshold_bytes: int = DONATION_THRESHOLD_BYTES,
+                program: str = "") -> List[Finding]:
+    """All HLO-level rules (R1, R4, R5) over one compiled module — the
+    one-call form ``launch/dryrun.py --lint`` / ``launch/train.py --lint``
+    use on the artifacts they just compiled anyway."""
+    out = lint_donation(hlo, donated_params,
+                        threshold_bytes=threshold_bytes, program=program)
+    out += lint_transfers(hlo, program=program)
+    out += lint_pallas(hlo, use_kernel=use_kernel, interpret=interpret,
+                       program=program)
+    return out
+
+
+def lint_pallas(hlo: str, *, use_kernel: bool, interpret: bool,
+                program: str = "") -> List[Finding]:
+    """R5: a ``use_kernel=True`` program must contain a real Pallas custom
+    call (``tpu_custom_call`` / ``__gpu$xla.gpu.triton``); interpret-mode
+    Pallas lowers to plain HLO ops with no kernel call at all, silently
+    simulating the kernel op-by-op."""
+    if not use_kernel:
+        return []
+    has_kernel_call = ("tpu_custom_call" in hlo
+                       or "__gpu$xla.gpu.triton" in hlo
+                       or "mosaic" in hlo)
+    if interpret or not has_kernel_call:
+        why = ("builder reports interpret=True" if interpret
+               else "no Pallas custom call in the optimized module")
+        return [finding(
+            "R5",
+            f"use_kernel=True lowered to interpret-mode Pallas ({why}): "
+            f"the kernel is being simulated op-by-op, not compiled",
+            location=program)]
+    return []

@@ -1,0 +1,182 @@
+"""Jaxpr-level lint: dtype hygiene (R2) and the retrace gate (R3).
+
+Works on ``jax.make_jaxpr`` output of the *real* step/runner programs —
+nothing is executed. The dtype rules walk every equation recursively
+(scan/cond/pjit bodies included) and attribute each finding to the user
+source line that emitted it, so a silent ``f32 -> f64`` upcast points at the
+offending expression, not at the XLA dump.
+
+Sanctioned f64: the Kahan/float64 bit accumulators in ``core/bits.py`` are
+the ONE place this codebase is allowed to hold f64 under x64 (their whole
+point is accumulating exact >2^24 bit totals); everything else doing f64
+math is a silent 2x memory/bandwidth tax that corrupts the BENCH artifacts
+without failing a numeric test.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Iterable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.rules import Finding, finding
+
+SANCTIONED_F64_FILES = ("core/bits.py",)
+
+
+def _user_frame(eqn) -> str:
+    """'file:line' of the first non-jax frame that emitted this equation."""
+    tb = getattr(eqn.source_info, "traceback", None)
+    if tb is None:
+        return ""
+    try:
+        frames = tb.frames
+    except AttributeError:
+        return ""
+    for fr in frames:
+        fname = getattr(fr, "file_name", "") or ""
+        if "/jax/" not in fname and "site-packages" not in fname:
+            return f"{fname}:{getattr(fr, 'start_line', 0)}"
+    return ""
+
+
+def _sub_jaxprs(eqn) -> Iterable[Any]:
+    """Sub-jaxprs held in an equation's params (scan/cond/pjit/while)."""
+    for val in eqn.params.values():
+        vals = val if isinstance(val, (list, tuple)) else (val,)
+        for v in vals:
+            if hasattr(v, "jaxpr"):            # ClosedJaxpr
+                yield v.jaxpr
+            elif hasattr(v, "eqns"):           # bare Jaxpr
+                yield v
+
+
+def _iter_eqns(jaxpr) -> Iterable[Any]:
+    """Every equation in a jaxpr, recursing into sub-jaxprs (scan bodies,
+    cond branches, pjit calls)."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for sub in _sub_jaxprs(eqn):
+            yield from _iter_eqns(sub)
+
+
+def _is_sanctioned(loc: str, sanctioned: Sequence[str]) -> bool:
+    return any(s in loc for s in sanctioned)
+
+
+def lint_dtypes(closed_jaxpr, *,
+                sanctioned_f64: Sequence[str] = SANCTIONED_F64_FILES,
+                program: str = "") -> List[Finding]:
+    """R2: f64 ops outside the sanctioned accumulators, and f32/bf16 -> f64
+    ``convert_element_type`` promotions anywhere outside them."""
+    out: List[Finding] = []
+    jaxpr = closed_jaxpr.jaxpr
+    seen = set()
+    for eqn in _iter_eqns(jaxpr):
+        loc = _user_frame(eqn)
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            dt = getattr(aval, "dtype", None)
+            if dt is None:
+                continue
+            if dt == jnp.float64 and not _is_sanctioned(loc, sanctioned_f64):
+                key = (eqn.primitive.name, loc)
+                if key in seen:
+                    continue
+                seen.add(key)
+                out.append(finding(
+                    "R2",
+                    f"f64 output of `{eqn.primitive.name}` outside the "
+                    f"sanctioned bit accumulators ({', '.join(sanctioned_f64)})",
+                    location=f"{program} {loc}".strip()))
+    return out
+
+
+def lint_weak_scalars(closed_jaxpr, *, program: str = "") -> List[Finding]:
+    """R2: weak-typed invars of the top-level jaxpr — a Python scalar leaked
+    into the traced signature. Harmless for values of one Python type, but
+    the jit cache keys on the weak dtype: alternating int/float call sites
+    retrace, and a downstream promotion silently follows the scalar."""
+    out: List[Finding] = []
+    for i, v in enumerate(closed_jaxpr.jaxpr.invars):
+        aval = v.aval
+        if getattr(aval, "weak_type", False) and not aval.shape:
+            out.append(finding(
+                "R2",
+                f"weak-typed scalar invar {i} ({aval.dtype}): a Python "
+                f"scalar leaked into the traced signature — pass a jnp "
+                f"array (or close over it) instead",
+                location=program))
+    return out
+
+
+def lint_carry_dtypes(in_tree_leaves, out_tree_leaves, *,
+                      labels: Optional[Sequence[str]] = None,
+                      program: str = "") -> List[Finding]:
+    """R2: carry dtype preservation — each (input leaf, output leaf) pair of
+    a donated carry must keep dtype AND shape, else donation silently breaks
+    and a bf16 estimate comes back f32 (2x storage, no test fails).
+
+    Call with the flattened avals/ShapeDtypeStructs of the carry as passed in
+    and as returned (e.g. a step function's state argument and state result).
+    """
+    out: List[Finding] = []
+    labels = labels or [f"leaf[{i}]" for i in range(len(in_tree_leaves))]
+    if len(in_tree_leaves) != len(out_tree_leaves):
+        out.append(finding(
+            "R2",
+            f"carry structure changed: {len(in_tree_leaves)} leaves in, "
+            f"{len(out_tree_leaves)} out", location=program))
+        return out
+    for name, a, b in zip(labels, in_tree_leaves, out_tree_leaves):
+        if a.dtype != b.dtype:
+            out.append(finding(
+                "R2",
+                f"carry leaf {name} drifts {a.dtype} -> {b.dtype} across the "
+                f"step (breaks donation; silent promotion)",
+                location=program))
+        elif tuple(a.shape) != tuple(b.shape):
+            out.append(finding(
+                "R2",
+                f"carry leaf {name} changes shape {tuple(a.shape)} -> "
+                f"{tuple(b.shape)} across the step (breaks donation)",
+                location=program))
+    return out
+
+
+# ------------------------------------------------------------- retrace gate
+
+class TraceCounter:
+    """Counts Python traces of a function: the wrapped body only executes
+    when jax traces it, so ``count`` == number of compile-cache misses."""
+
+    def __init__(self, fn: Callable):
+        self._fn = fn
+        self.count = 0
+
+    def __call__(self, *args, **kwargs):
+        self.count += 1
+        return self._fn(*args, **kwargs)
+
+
+def audit_retrace(run_once: Callable[[], Any], counter: "TraceCounter | Any",
+                  *, calls: int = 2, expect: int = 1,
+                  program: str = "") -> List[Finding]:
+    """R3: invoke ``run_once`` ``calls`` times and pin the trace count.
+
+    ``counter`` is a TraceCounter (or any object with a ``count`` attribute,
+    e.g. an engine runner's ``trace_count``) wrapped around the traced
+    function BEFORE jit. Exactly ``expect`` traces per (config, shape) is the
+    contract: a second trace on a repeat call means the jit cache missed —
+    every step of a real run would pay compile."""
+    for _ in range(calls):
+        run_once()
+    count = counter.count if hasattr(counter, "count") else int(counter())
+    if count != expect:
+        return [finding(
+            "R3",
+            f"{count} traces over {calls} identical calls (expected "
+            f"{expect}): the program retraces on a repeat call — check for "
+            f"Python-scalar args alternating int/float, re-built closures, "
+            f"or unhashable static args", location=program)]
+    return []

@@ -1,0 +1,200 @@
+"""Rule registry for the static-audit pass (repro.analysis).
+
+Every check the jaxpr/HLO linters implement is registered here with a stable
+id, a severity, and a one-line contract, so findings are machine-diffable
+(results/ANALYSIS.json) and individually suppressible. The catalog:
+
+* **R1 donation-audit** — every donated carry buffer above the size threshold
+  must be output-aliased in the compiled executable (``input_output_alias``);
+  a large donated-but-unaliased parameter silently doubles HBM and breaks the
+  in-place scan the engines are built around.
+* **R2 dtype-lint** — no silent promotions in the traced program: f64 ops are
+  sanctioned only inside core/bits.py's accumulators, carry leaves must keep
+  their dtype end-to-end (a bf16 x_hat that comes back f32 doubles storage
+  and kills donation), and weak-typed scalar inputs (leaked Python scalars in
+  the traced signature) are flagged.
+* **R3 retrace-gate** — exactly ONE trace per (config, shape): a repeat call
+  of the same program that traces again means every step pays compile, and
+  every BENCH us_per_call is fiction.
+* **R4 hidden-transfer-lint** — no host callbacks (``custom-call`` to a
+  python/ffi callback), ``infeed``/``outfeed``, ``send``/``recv``, or
+  device->host ``copy-start`` inside (or reachable from) a scanned while
+  body: any of these serializes the scan on host round trips without failing
+  a single numeric test.
+* **R5 interpret-leak** — a ``use_kernel=True`` program must lower to a real
+  Pallas custom call on TPU; interpret-mode Pallas silently simulates the
+  kernel op-by-op (the off-TPU CI fallback, sanctioned there via a documented
+  suppression).
+
+Suppressions are explicit and documented: a ``{rule_id: reason}`` mapping (or
+``{rule_id: {"match": substring, "reason": ...}}``) downgrades matching
+findings to ``suppressed`` — they stay in the report, they stop failing it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Iterable, List, Mapping, Optional, Union
+
+ERROR = "error"
+WARNING = "warning"
+INFO = "info"
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    rule_id: str
+    title: str
+    severity: str
+    contract: str
+
+
+RULES: Dict[str, Rule] = {r.rule_id: r for r in (
+    Rule("R1", "donation-audit", ERROR,
+         "every donated parameter above threshold_bytes is output-aliased "
+         "in the compiled module's input_output_alias map"),
+    Rule("R2", "dtype-lint", ERROR,
+         "no f64 ops outside core/bits.py, no carry dtype drift, no "
+         "weak-typed scalar leaks in the traced signature"),
+    Rule("R3", "retrace-gate", ERROR,
+         "exactly one trace per (config, shape); a repeat call must hit "
+         "the jit cache"),
+    Rule("R4", "hidden-transfer-lint", ERROR,
+         "no host callbacks, infeed/outfeed, send/recv or device->host "
+         "copy-start inside a scanned while body"),
+    Rule("R5", "interpret-leak", ERROR,
+         "use_kernel=True must lower to a compiled Pallas custom call, "
+         "not interpret-mode simulation"),
+)}
+
+
+@dataclasses.dataclass
+class Finding:
+    rule_id: str
+    severity: str
+    message: str
+    location: str = ""            # program / computation / eqn provenance
+    suppressed: bool = False
+    suppression_reason: str = ""
+
+    def to_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+def finding(rule_id: str, message: str, location: str = "",
+            severity: Optional[str] = None) -> Finding:
+    """A finding for a registered rule (severity defaults to the rule's)."""
+    rule = RULES[rule_id]
+    return Finding(rule_id=rule_id, severity=severity or rule.severity,
+                   message=message, location=location)
+
+
+Suppression = Union[str, Mapping[str, str]]
+
+
+def apply_suppressions(findings: Iterable[Finding],
+                       suppressions: Mapping[str, Suppression]) -> List[Finding]:
+    """Mark findings matching a suppression entry; returns the same findings.
+
+    ``suppressions`` maps rule_id -> reason string (suppress every finding of
+    that rule) or -> {"match": substring, "reason": ...} (suppress findings
+    whose message or location contains the substring). Unsuppressed findings
+    pass through untouched, so the report still diffs complete."""
+    out = []
+    for f in findings:
+        sup = suppressions.get(f.rule_id)
+        if sup is not None:
+            if isinstance(sup, str):
+                f.suppressed, f.suppression_reason = True, sup
+            else:
+                needle = sup.get("match", "")
+                if needle in f.message or needle in f.location:
+                    f.suppressed = True
+                    f.suppression_reason = sup.get(
+                        "reason", f"matched {needle!r}")
+        out.append(f)
+    return out
+
+
+@dataclasses.dataclass
+class Report:
+    """One audited program's findings plus identifying metadata."""
+
+    program: str                       # e.g. "core/run_traced" or "dist/train_step"
+    findings: List[Finding] = dataclasses.field(default_factory=list)
+    meta: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+    def extend(self, more: Iterable[Finding]) -> "Report":
+        self.findings.extend(more)
+        return self
+
+    @property
+    def errors(self) -> List[Finding]:
+        return [f for f in self.findings
+                if f.severity == ERROR and not f.suppressed]
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    def counts(self) -> Dict[str, int]:
+        c = {"errors": 0, "warnings": 0, "info": 0, "suppressed": 0}
+        for f in self.findings:
+            if f.suppressed:
+                c["suppressed"] += 1
+            elif f.severity == ERROR:
+                c["errors"] += 1
+            elif f.severity == WARNING:
+                c["warnings"] += 1
+            else:
+                c["info"] += 1
+        return c
+
+    def to_dict(self) -> Dict[str, object]:
+        return {"program": self.program, "meta": self.meta,
+                "counts": self.counts(),
+                "findings": [f.to_dict() for f in self.findings]}
+
+
+def render_report(reports: Iterable[Report],
+                  suppressions: Mapping[str, Suppression],
+                  extra: Optional[Dict[str, object]] = None) -> Dict[str, object]:
+    """The ANALYSIS.json document: rule catalog + per-program findings."""
+    reports = list(reports)
+    totals = {"errors": 0, "warnings": 0, "info": 0, "suppressed": 0}
+    for r in reports:
+        for k, v in r.counts().items():
+            totals[k] += v
+    doc: Dict[str, object] = {
+        "schema_version": 1,
+        "rules": {rid: {"title": r.title, "severity": r.severity,
+                        "contract": r.contract}
+                  for rid, r in RULES.items()},
+        "suppressions": {k: (v if isinstance(v, str) else dict(v))
+                         for k, v in suppressions.items()},
+        "summary": totals,
+        "ok": totals["errors"] == 0,
+        "programs": [r.to_dict() for r in reports],
+    }
+    if extra:
+        doc.update(extra)
+    return doc
+
+
+def default_suppressions(backend: str) -> Dict[str, Suppression]:
+    """The repo's one sanctioned suppression: off-TPU backends have no
+    Mosaic compiler, so interpret-mode Pallas (R5) is the documented CI
+    fallback there (ROADMAP item 1 tracks real compiled kernels)."""
+    sup: Dict[str, Suppression] = {}
+    if backend != "tpu":
+        sup["R5"] = {"match": "interpret",
+                     "reason": "off-TPU backend: interpret-mode Pallas is "
+                               "the sanctioned CI fallback (ROADMAP item 1 "
+                               "tracks compiled Mosaic kernels)"}
+    return sup
+
+
+def dump_report(doc: Dict[str, object], path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=False)
+        f.write("\n")

@@ -3,7 +3,6 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Dict, Optional
 
 from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
 

@@ -11,7 +11,7 @@
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +21,7 @@ from repro.core import engine
 from repro.core.compression import Compressor
 from repro.core.faults import FaultPlan, resolve_faults
 from repro.core.schedule import LRSchedule
-from repro.core.sparq import GradFn, SparqConfig, SparqState, init_state, make_step
+from repro.core.sparq import GradFn, SparqConfig
 from repro.core.topology import Topology
 from repro.core.triggers import zero
 from repro.optim.sgd import Optimizer, resolve_optimizer

@@ -125,7 +125,10 @@ def make_runner(step_fn: Callable[[Any, jax.Array], Any], T: int, *,
         carry, _ = jax.lax.scan(step_body, carry, None, length=rec)
         return carry, record(carry[0])
 
+    trace_count = [0]  # python body executions == jit cache misses (R3 audit)
+
     def program(state, key):
+        trace_count[0] += 1
         carry = (state, key)
         recs = None
         if n_chunks:
@@ -152,6 +155,13 @@ def make_runner(step_fn: Callable[[Any, jax.Array], Any], T: int, *,
         return final, Trace(*jax.device_get(recs))
 
     runner.warmup = warmup
+    # static-audit hooks (repro.analysis): lower without executing, read the
+    # AOT-compiled artifact, and count traces (exactly 1 per shape is the
+    # retrace-gate contract — see analysis/jaxpr_lint.audit_retrace)
+    runner.lower = jitted.lower
+    runner.compiled = lambda: compiled
+    runner.trace_count = lambda: trace_count[0]
+    runner.donate = donate
     return runner
 
 

@@ -114,7 +114,6 @@ def logistic_loss_and_grad(n_classes: int):
         return grad_fn
 
     def full_loss(x_flat, X, Y):
-        n = X.shape[0]
         return jnp.mean(jax.vmap(lambda Xi, Yi: loss(x_flat, Xi, Yi))(X, Y))
 
     return loss, make_grad_fn, full_loss

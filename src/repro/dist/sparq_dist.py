@@ -271,7 +271,7 @@ def build_sparq(cfg, mesh, dcfg: DistSparqConfig
     # that is a node-stacked buffer gets its param-rule spec, anything else
     # (step counts, ()-shaped leaves) replicates
     stacked = jax.tree.map(
-        lambda l: jax.ShapeDtypeStruct((n,) + l.shape, l.dtype), pshape)
+        lambda p: jax.ShapeDtypeStruct((n,) + p.shape, p.dtype), pshape)
     opt_shape_u = jax.eval_shape(opt.init, pshape)      # un-stacked buffers
     opt_unstacked, opt_treedef = jax.tree.flatten(opt_shape_u)
     opt_stacked = jax.tree.leaves(jax.eval_shape(opt.init, stacked))
@@ -423,6 +423,10 @@ def build_sparq(cfg, mesh, dcfg: DistSparqConfig
                    "triggers": trigs.astype(jnp.float32)}
         return new_state, metrics
 
+    # static-audit metadata (repro.analysis R5): whether the kernel path was
+    # requested and whether Pallas would run in interpret mode on this backend
+    init_fn.use_kernel = train_step.use_kernel = bool(dcfg.use_kernel)
+    init_fn.interpret = train_step.interpret = bool(interpret)
     init_fn.n_nodes = train_step.n_nodes = n
     # the ACTUALLY-running plan, for callers that want to log/inspect it
     # without re-resolving (sampled plans are seed-deterministic, but the

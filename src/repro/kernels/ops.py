@@ -8,7 +8,6 @@ interpret=False (kernels are written for pl.pallas_call + BlockSpec VMEM tiling)
 from __future__ import annotations
 
 import functools
-import math
 from typing import Tuple
 
 import jax

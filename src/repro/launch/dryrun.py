@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.analysis.hlo_lint import run_lint
 from repro.configs.registry import (ARCH_IDS, cache_len, for_shape, get_config,
                                     shape_by_name)
 from repro.dist import serve as serve_mod
@@ -51,7 +52,7 @@ def param_count(cfg: ModelConfig) -> int:
     pshape = jax.eval_shape(
         lambda k: __import__("repro.models.transformer", fromlist=["init_params"]
                              ).init_params(cfg, k), jax.random.PRNGKey(0))
-    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(pshape))
+    return sum(int(np.prod(leaf.shape)) for leaf in jax.tree.leaves(pshape))
 
 
 def active_param_count(cfg: ModelConfig) -> int:
@@ -73,7 +74,6 @@ def analyse(compiled, n_chips: int, cfg: ModelConfig, shape: InputShape,
     if isinstance(ca, list):
         ca = ca[0]
     ca_flops = float(ca.get("flops", 0.0))
-    ca_bytes = float(ca.get("bytes accessed", 0.0))
     hlo = compiled.as_text()
     # trip-count-aware walk (cost_analysis counts scan bodies once; see
     # launch/hlo_walk.py) — dot FLOPs and collective bytes are exact,
@@ -130,7 +130,8 @@ def make_batch_sds(cfg: ModelConfig, shape: InputShape, n_nodes: int):
 
 
 def dryrun_train(cfg: ModelConfig, shape: InputShape, prod_mesh,
-                 variant: str = "dense", opts: str = "") -> Dict[str, Any]:
+                 variant: str = "dense", opts: str = "",
+                 lint: bool = False) -> Dict[str, Any]:
     import dataclasses as _dc
     # expert-dim pinning is opt-in for TRAIN: for 256-expert dsv3 the forced
     # expert-local resharding costs more collectives than it saves (§Perf C.3)
@@ -173,11 +174,20 @@ def dryrun_train(cfg: ModelConfig, shape: InputShape, prod_mesh,
     res = analyse(compiled, prod_mesh.devices.size, cfg, shape)
     res.update(step="train_step", n_nodes=n_nodes, variant=variant,
                compile_seconds=round(dt, 1))
+    if lint:
+        # donated state leaves are the leading entry params (jit flattens
+        # (state, batch) in pytree order, state first)
+        res["lint"] = run_lint(
+            compiled.as_text(),
+            donated_params=range(len(jax.tree.leaves(state_sds))),
+            use_kernel=train_step.use_kernel,
+            interpret=train_step.interpret,
+            program=f"dryrun_train[{cfg.arch_id}]")
     return res
 
 
 def dryrun_serve(cfg: ModelConfig, shape: InputShape, prod_mesh,
-                 opts: str = "") -> Dict[str, Any]:
+                 opts: str = "", lint: bool = False) -> Dict[str, Any]:
     mesh = sh.serve_mesh(prod_mesh)
     import dataclasses as _dc
     if cfg.n_experts and "no_epin" not in opts:
@@ -215,6 +225,16 @@ def dryrun_serve(cfg: ModelConfig, shape: InputShape, prod_mesh,
     res = analyse(compiled, prod_mesh.devices.size, cfg, shape)
     res.update(step=step_name, cache_len=clen if shape.is_decode else None,
                compile_seconds=round(dt, 1))
+    if lint:
+        # decode donates argnum 1 (the KV cache): its leaves sit after the
+        # param leaves in the flattened entry params; prefill donates nothing
+        if shape.is_decode:
+            n_p = len(jax.tree.leaves(pshape))
+            donated = range(n_p, n_p + len(jax.tree.leaves(cshape)))
+        else:
+            donated = range(0)
+        res["lint"] = run_lint(compiled.as_text(), donated,
+                               program=f"{step_name}[{cfg.arch_id}]")
     return res
 
 
@@ -223,7 +243,8 @@ def skip_reason(cfg: ModelConfig, shape: InputShape) -> Optional[str]:
 
 
 def run_one(arch: str, shape_name: str, multi_pod: bool,
-            variant: str, opts: str = "") -> Dict[str, Any]:
+            variant: str, opts: str = "",
+            lint: bool = False) -> Dict[str, Any]:
     shape = shape_by_name(shape_name)
     cfg = for_shape(get_config(arch), shape)
     import dataclasses as _dc
@@ -241,9 +262,9 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         return {**base, "skipped": reason}
     try:
         if shape.kind == "train":
-            res = dryrun_train(cfg, shape, prod_mesh, variant, opts)
+            res = dryrun_train(cfg, shape, prod_mesh, variant, opts, lint)
         else:
-            res = dryrun_serve(cfg, shape, prod_mesh, opts)
+            res = dryrun_serve(cfg, shape, prod_mesh, opts, lint)
         return {**base, **res, "ok": True}
     except Exception as e:  # noqa: BLE001 - report, don't crash the sweep
         return {**base, "ok": False, "error": f"{type(e).__name__}: {e}",
@@ -259,6 +280,10 @@ def main(argv=None):
     ap.add_argument("--variant", default="dense", choices=["dense", "ring"])
     ap.add_argument("--opts", default="", help="comma list: microN, xhat_bf16,"
                     " embed_dmodel, causalN (perf-iteration knobs)")
+    ap.add_argument("--lint", action="store_true",
+                    help="run the repro.analysis HLO rules (donation/"
+                         "transfer/interpret lint) over each compiled "
+                         "module; lint errors fail the sweep")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 
@@ -270,7 +295,8 @@ def main(argv=None):
     for arch in archs:
         for shape_name in shapes:
             for mp in meshes:
-                r = run_one(arch, shape_name, mp, args.variant, args.opts)
+                r = run_one(arch, shape_name, mp, args.variant, args.opts,
+                            args.lint)
                 status = ("SKIP " + r["skipped"]) if r.get("skipped") else (
                     "OK" if r.get("ok") else "FAIL " + r.get("error", ""))
                 print(f"[dryrun] {arch:18s} {shape_name:12s} "
@@ -287,7 +313,10 @@ def main(argv=None):
             json.dump(results, f, indent=1)
         print(f"wrote {args.out}")
     nfail = sum(1 for r in results if not r.get("ok") and not r.get("skipped"))
-    return 1 if nfail else 0
+    nlint = sum(r.get("lint", {}).get("errors", 0) for r in results)
+    if nlint:
+        print(f"[dryrun] {nlint} lint error(s)")
+    return 1 if (nfail or nlint) else 0
 
 
 if __name__ == "__main__":

@@ -363,3 +363,154 @@ def analyse_hlo(hlo: str) -> Dict[str, object]:
     flops, nbytes, coll = evaluate(comps, entry) if entry else (0.0, 0.0, {})
     return {"dot_flops": flops, "hbm_bytes": nbytes,
             "collective_bytes": sum(coll.values()), "collectives": coll}
+
+
+# --------------------------------------------------------------- static audit
+#
+# Structural views of the optimized-HLO text used by repro.analysis: the
+# donation/alias map from the module header, the entry parameter list, and the
+# set of computations reachable from while (lax.scan / fori_loop) bodies —
+# including computations reached only through fusion/call/conditional edges or
+# async-start wrappers (async ops carry the same ``calls=`` attribute the
+# call-graph pass above consumes).
+
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{\s*([0-9,\s]*)\}\s*:\s*\(\s*(\d+)\s*,\s*\{\s*([0-9,\s]*)\}\s*"
+    r"(?:,\s*([\w\-]+))?\)")
+
+
+def _index_tuple(text: str) -> Tuple[int, ...]:
+    return tuple(int(p) for p in text.split(",") if p.strip())
+
+
+def parse_alias_map(hlo: str) -> Dict[Tuple[int, ...],
+                                      Tuple[int, Tuple[int, ...], str]]:
+    """``input_output_alias`` from the module header.
+
+    Returns {output_index: (param_number, param_index, kind)} where the index
+    keys are ShapeIndex tuples (() for a whole non-tuple parameter). An HLO
+    module with no donated/aliased buffers has no such attribute -> {}."""
+    start = hlo.find("input_output_alias={")
+    if start < 0:
+        return {}
+    # brace-balanced extraction: the attribute value nests ShapeIndex braces
+    # ({0}: (0, {}, may-alias)), so a non-greedy regex would stop early
+    i = start + len("input_output_alias={")
+    depth, chars = 1, []
+    while i < len(hlo) and depth:
+        ch = hlo[i]
+        if ch == "{":
+            depth += 1
+        elif ch == "}":
+            depth -= 1
+            if not depth:
+                break
+        chars.append(ch)
+        i += 1
+    body = "".join(chars)
+    out: Dict[Tuple[int, ...], Tuple[int, Tuple[int, ...], str]] = {}
+    for om, pnum, pidx, kind in _ALIAS_ENTRY_RE.findall(body):
+        out[_index_tuple(om)] = (int(pnum), _index_tuple(pidx),
+                                 kind or "may-alias")
+    return out
+
+
+def entry_parameters(hlo: str) -> List[Tuple[str, List[int]]]:
+    """(dtype, dims) of each entry parameter, in parameter order.
+
+    Parsed from ``entry_computation_layout={(...)->...}``; jit-compiled
+    programs have one flat (non-tuple) parameter per argument leaf."""
+    m = re.search(r"entry_computation_layout=\{\((.*?)\)\s*->", hlo)
+    if m is None:
+        return []
+    out: List[Tuple[str, List[int]]] = []
+    # parameters are comma-separated at depth 0; `{...}` layout suffixes and
+    # possible /*index=N*/ comments ride along with each element
+    depth, cur, parts = 0, [], []
+    for ch in m.group(1):
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    for part in parts:
+        sm = _SHAPE_RE.search(part)
+        if sm:
+            out.append((sm.group(1),
+                        [int(d) for d in sm.group(2).split(",") if d]))
+        else:
+            # token/opaque or scalar of an unknown dtype: keep position
+            out.append(("unknown", []))
+    return out
+
+
+def parameter_bytes(dtype: str, dims: List[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def computation_bodies(hlo: str) -> Dict[str, List[str]]:
+    """Raw instruction lines per computation (the pass-1 split of
+    :func:`parse_module`, exposed for the op-level lint rules)."""
+    bodies: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    cur_lines: List[str] = []
+    for raw in hlo.splitlines():
+        st = raw.rstrip().strip()
+        if cur is None:
+            m = _HDR_RE.match(st)
+            if m and ("->" in st or m.group(1)):
+                cur = m.group(2)
+                cur_lines = []
+            continue
+        if st == "}":
+            bodies[cur] = cur_lines
+            cur = None
+            continue
+        cur_lines.append(st)
+    return bodies
+
+
+def while_reachable(hlo: str) -> set:
+    """Names of computations reachable from any while body or condition.
+
+    Follows every call edge :func:`parse_module` records — fusion ``calls=``,
+    ``to_apply=``, conditional branches, nested whiles, and async-start
+    wrappers (whose wrapped computation also rides the ``calls=`` attribute) —
+    so an op buried in a computation reached only via an async op still counts
+    as "inside the scanned body"."""
+    comps, _ = parse_module(hlo)
+    roots: List[str] = []
+    for comp in comps.values():
+        for kind, payload in comp.children:
+            if kind == "while":
+                body, cond = payload
+                roots.append(body)
+                if cond:
+                    roots.append(cond)
+    seen: set = set()
+    stack = list(roots)
+    while stack:
+        name = stack.pop()
+        if name in seen or name not in comps:
+            continue
+        seen.add(name)
+        for kind, payload in comps[name].children:
+            if kind == "while":
+                body, cond = payload
+                stack.append(body)
+                if cond:
+                    stack.append(cond)
+            elif kind == "cond":
+                stack.extend(payload)
+            else:
+                stack.append(payload)
+    return seen

@@ -80,6 +80,10 @@ def _parse():
     ap.add_argument("--threshold", type=float, default=2.0)
     ap.add_argument("--use-kernel", action="store_true",
                     help="Pallas sign-topk compression kernel")
+    ap.add_argument("--lint", action="store_true",
+                    help="static-audit the compiled step (repro.analysis "
+                         "R1/R4/R5: donation, hidden transfers, interpret "
+                         "leak) before training; lint errors abort the run")
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -166,7 +170,7 @@ def main():
         edge_frac=args.edge_frac, topo_seed=args.topo_seed,
         faults=faults)
     init_fn, train_step, state_specs, pshape = build_sparq(cfg, mesh, dcfg)
-    n_params = sum(np.prod(l.shape) for l in jax.tree.leaves(pshape))
+    n_params = sum(np.prod(leaf.shape) for leaf in jax.tree.leaves(pshape))
     plan = init_fn.plan   # the engine's own plan, not a re-resolution
     print(f"[train] mesh {dict(mesh.shape)}  arch={cfg.arch_id} "
           f"(~{n_params / 1e6:.1f}M params/node)")
@@ -213,6 +217,27 @@ def main():
                        is_leaf=lambda x: isinstance(x, P))
     step = jax.jit(train_step, in_shardings=(ssh, bsh),
                    donate_argnums=(0,))
+
+    if args.lint:
+        # audit THIS jitted step: .lower() shares the trace cache with the
+        # training loop's calls, so the audit adds one AOT compile but no
+        # extra trace (the repro.analysis retrace gate relies on the same)
+        from repro.analysis.hlo_lint import run_lint
+        state_sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        hlo = step.lower(state_sds, jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            b0)).compile().as_text()
+        lint = run_lint(
+            hlo, donated_params=range(len(jax.tree.leaves(state))),
+            use_kernel=train_step.use_kernel,
+            interpret=train_step.interpret,
+            program=f"train[{cfg.arch_id}]")
+        if lint["errors"]:
+            raise SystemExit(
+                f"[train] --lint: {lint['errors']} static-audit error(s) "
+                f"in the compiled step (see findings above)")
+        print("[train] --lint: compiled step passes the static audit")
 
     metrics = None
     t0 = time.time()

@@ -67,12 +67,12 @@ def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array):
 
 def segsum(x: jax.Array) -> jax.Array:
     """Lower-triangular cumulative segment sums: out[..., i, j] = sum_{j<k<=i} x[k]."""
-    l = x.shape[-1]
-    x = repeat(x, "... l -> ... l e", e=l)
-    mask = jnp.tril(jnp.ones((l, l), bool), -1)
+    seg = x.shape[-1]
+    x = repeat(x, "... l -> ... l e", e=seg)
+    mask = jnp.tril(jnp.ones((seg, seg), bool), -1)
     x = jnp.where(mask, x, 0)
     x_seg = jnp.cumsum(x, axis=-2)
-    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    mask = jnp.tril(jnp.ones((seg, seg), bool), 0)
     return jnp.where(mask, x_seg, -jnp.inf)
 
 
@@ -171,7 +171,6 @@ def ssm_decode(cfg: ModelConfig, p: Params, x: jax.Array,
     """One-token recurrent update. x: (B, 1, D); state: (B, H, P, N);
     conv_buf: (B, K-1, C)."""
     cd = jnp.dtype(cfg.compute_dtype)
-    bsz = x.shape[0]
     d_in, h, p_dim, g, n = _dims(cfg)
     zxbcdt = x[:, 0] @ p["w_in"].astype(cd)                  # (B, proj)
     z, xbc, dt_raw = _split_proj(cfg, zxbcdt)

@@ -5,7 +5,6 @@ AdamW is provided for the framework's standalone (non-decentralized) training pa
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple, Tuple
 
 import jax

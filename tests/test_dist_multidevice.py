@@ -109,7 +109,7 @@ def test_dist_sparq_8_devices():
     r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
                        capture_output=True, text=True, timeout=1200)
     assert r.returncode == 0, r.stderr[-3000:]
-    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    line = [ln for ln in r.stdout.splitlines() if ln.startswith("RESULT ")][-1]
     out = json.loads(line[len("RESULT "):])
     # ring gossip == dense gossip on a ring graph (fp32 tolerance)
     assert out["dense_ring_max_diff"] < 5e-3

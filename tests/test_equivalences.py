@@ -8,9 +8,7 @@ import numpy as np
 
 from repro.configs.registry import get_config
 from repro.models import attention as attn
-from repro.models.config import ModelConfig
-from repro.models.transformer import (chunked_ce, forward, init_params,
-                                      lm_loss)
+from repro.models.transformer import chunked_ce, init_params, lm_loss
 from repro.models.layers import lm_logits
 
 
@@ -23,8 +21,6 @@ def test_causal_parts_equals_full_attention():
     k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, hd))
     v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, hd))
     pos = jnp.arange(s)
-    cfg1 = get_config("qwen1.5-0.5b").reduced()
-    cfg8 = dataclasses.replace(cfg1, causal_parts=4)
     # use f32 scores for an exact comparison
     full = attn.chunked_attention(q, k, v, pos, pos, q_chunk=128, k_chunk=128,
                                   score_dtype=jnp.float32)

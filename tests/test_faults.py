@@ -84,7 +84,6 @@ def test_repaired_matrix_doubly_stochastic_fixed_seeds():
             jnp.asarray(make_plan("ring", 8, dynamic="matchings", rounds=3,
                                   seed=0).ws[1], jnp.float32)]
     for W in mats:
-        n = W.shape[0]
         for drop in (0.1, 0.5, 0.9):
             for windows in ((), (DropoutWindow(0, 0, 100),)):
                 fp = FaultPlan(link_drop=drop, dropout=windows, seed=3)

@@ -90,3 +90,113 @@ def test_hbm_bytes_positive_and_scale_with_trips():
     b8, b16 = scan_n(8), scan_n(16)
     assert b8 > 0
     assert 1.7 < b16 / b8 < 2.3
+
+
+# ---------------------------------------------------------- static-audit views
+# (parse_alias_map / entry_parameters / while_reachable, used by repro.analysis)
+
+def test_alias_map_from_real_donated_jit():
+    import warnings
+    from repro.launch.hlo_walk import entry_parameters, parse_alias_map
+    x = jnp.ones((512, 1024), jnp.float32)
+    c = jax.jit(lambda a, b: (a + 1.0, b * 2.0),
+                donate_argnums=(0, 1)).lower(x, x).compile()
+    aliases = parse_alias_map(c.as_text())
+    # both donated leaves alias an output; param indices are flat (non-tuple)
+    assert {p for p, idx, _ in aliases.values()} == {0, 1}
+    assert all(idx == () for _, idx, _ in aliases.values())
+    params = entry_parameters(c.as_text())
+    assert params == [("f32", [512, 1024]), ("f32", [512, 1024])]
+    # dtype drift drops the alias entirely
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        c2 = jax.jit(lambda a: a.astype(jnp.bfloat16) * 1,
+                     donate_argnums=0).lower(x).compile()
+    assert parse_alias_map(c2.as_text()) == {}
+
+
+def test_alias_map_absent_without_donation():
+    from repro.launch.hlo_walk import parse_alias_map
+    c = jax.jit(lambda a: a + 1.0).lower(jnp.ones((8, 8))).compile()
+    assert parse_alias_map(c.as_text()) == {}
+
+
+def test_alias_map_parses_tuple_shape_indices():
+    from repro.launch.hlo_walk import parse_alias_map
+    hdr = ('HloModule m, input_output_alias={ {0}: (0, {}, must-alias), '
+           '{1, 2}: (1, {0}, may-alias) }\n')
+    aliases = parse_alias_map(hdr)
+    assert aliases[(0,)] == (0, (), "must-alias")
+    assert aliases[(1, 2)] == (1, (0,), "may-alias")
+
+
+def test_entry_parameters_mixed_dtypes_keep_positions():
+    from repro.launch.hlo_walk import entry_parameters, parameter_bytes
+    c = jax.jit(lambda a, t, p: (a * t.sum(), p)).lower(
+        jnp.ones((4, 8), jnp.bfloat16), jnp.ones((2,), jnp.int32),
+        jnp.ones((), jnp.float32)).compile()
+    params = entry_parameters(c.as_text())
+    assert params[0] == ("bf16", [4, 8])
+    assert params[1] == ("s32", [2])
+    assert params[2] == ("f32", [])
+    assert parameter_bytes(*params[0]) == 4 * 8 * 2
+    assert parameter_bytes(*params[2]) == 4
+
+
+def test_while_reachable_includes_fusion_callees():
+    import re
+    from repro.launch.hlo_walk import computation_bodies, while_reachable
+
+    def body(c, w):
+        return jnp.tanh(c @ w), None
+    c = jax.jit(lambda x, ws: jax.lax.scan(body, x, ws)[0]).lower(
+        jnp.zeros((16, 32)), jnp.zeros((4, 32, 32))).compile()
+    hlo = c.as_text()
+    reach = while_reachable(hlo)
+    bodies = computation_bodies(hlo)
+    assert reach  # body + condition at minimum
+    # every computation a reachable computation calls (fusion calls= /
+    # call to_apply=) is itself reachable — transitive closure holds
+    callees = {callee
+               for name in reach for line in bodies.get(name, ())
+               for callee in re.findall(r"(?:calls|to_apply)=%?([\w\.\-]+)",
+                                        line)}
+    assert callees, "fixture regressed: scan body no longer fuses"
+    assert callees <= reach
+    # the entry computation itself is NOT inside the while
+    assert not any(n.startswith("main") for n in reach)
+
+
+def test_while_reachable_follows_async_calls_edges():
+    # async collectives wrap their payload computation behind an
+    # async-start op carrying the same calls= attribute fusions use;
+    # CPU never emits these, so the module is synthetic.
+    from repro.launch.hlo_walk import while_reachable
+    hlo = """
+HloModule m
+
+%payload (p: f32[8]) -> f32[8] {
+  %p = f32[8]{0} parameter(0)
+  ROOT %ag = f32[8]{0} all-gather(f32[8]{0} %p), dimensions={0}
+}
+
+%body (c: f32[8]) -> f32[8] {
+  %c = f32[8]{0} parameter(0)
+  %st = ((f32[8]{0}), f32[8]{0}) async-start(f32[8]{0} %c), calls=%payload
+  ROOT %dn = f32[8]{0} async-done(((f32[8]{0}), f32[8]{0}) %st)
+}
+
+%cond (c2: f32[8]) -> pred[] {
+  %c2 = f32[8]{0} parameter(0)
+  ROOT %lt = pred[] constant(0)
+}
+
+ENTRY %main (x: f32[8]) -> f32[8] {
+  %x = f32[8]{0} parameter(0)
+  ROOT %w = f32[8]{0} while(f32[8]{0} %x), condition=%cond, body=%body
+}
+"""
+    reach = while_reachable(hlo)
+    assert "body" in reach and "cond" in reach
+    assert "payload" in reach  # reached only through the async edge
+    assert "main" not in reach

@@ -91,7 +91,6 @@ def test_train_mesh_reshape_properties():
     class FakeMesh:
         def __init__(self, shape):
             self.devices = np.arange(np.prod(shape)).reshape(shape)
-    import dataclasses
     cfg = get_config("qwen1.5-0.5b")  # n_nodes 16
 
     prod = FakeMesh((16, 16))

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core import baselines
-from repro.core.compression import Identity, SignTopK, TopK, make_compressor
+from repro.core.compression import Identity, SignTopK, TopK
 from repro.core.schedule import decaying, fixed
 from repro.core.sparq import SparqConfig, init_state, make_step, run, run_scan
 from repro.core.topology import make_topology

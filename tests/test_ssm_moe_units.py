@@ -4,7 +4,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis_compat import given, settings, st
 
 from repro.configs.registry import get_config

@@ -69,8 +69,8 @@ def test_full_state_checkpoint_roundtrip(tmp_path):
     assert int(restored["triggers"]) == int(state["triggers"])
     assert float(restored["bits"]) == float(state["bits"])
     # momentum buffers are real data, not zeros
-    opt_norm = sum(float(np.abs(np.asarray(l)).sum())
-                   for l in jax.tree_util.tree_leaves(restored["opt"]))
+    opt_norm = sum(float(np.abs(np.asarray(leaf)).sum())
+                   for leaf in jax.tree_util.tree_leaves(restored["opt"]))
     assert opt_norm > 0
 
 
