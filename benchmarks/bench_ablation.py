@@ -8,6 +8,7 @@ from typing import Dict, List
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.contracts import contract_status
 from repro.core import engine
 from repro.core.compression import SignTopK
 from repro.core.schedule import decaying
@@ -52,12 +53,16 @@ def run_bench(quick: bool = True) -> List[Dict]:
         # evaluate on the true step-T iterate (the last trace record sits at
         # (T//rec)*rec, which is < T when rec does not divide T)
         final_loss = float(eval_fn(jnp.mean(st.x, 0)))
-        rows.append({"name": f"ablate_{name}", "us_per_call": round(us, 1),
-                     "final_loss": round(final_loss, 4),
-                     "bits": float(st.bits),
-                     "rounds": int(st.sync_rounds),
-                     "trigger_events": int(st.triggers),
-                     "trace": trace.to_dict()})
+        row = {"name": f"ablate_{name}", "us_per_call": round(us, 1),
+               "final_loss": round(final_loss, 4),
+               "bits": float(st.bits),
+               "rounds": int(st.sync_rounds),
+               "trigger_events": int(st.triggers),
+               "trace": trace.to_dict()}
+        row.update(contract_status(cfg, f * c, bits=row["bits"],
+                                   sync_rounds=row["rounds"],
+                                   trigger_events=row["trigger_events"]))
+        rows.append(row)
     return rows
 
 

@@ -17,6 +17,7 @@ from typing import Dict, List
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.contracts import contract_status
 from repro.core import baselines, engine
 from repro.core.compression import Sign, SignTopK, TopK
 from repro.core.schedule import decaying
@@ -54,12 +55,16 @@ def run_bench(quick: bool = True) -> List[Dict]:
         st, trace, us = engine.timed_run(
             runner, lambda: cfg.init_state(x0), key, T)
         final = trace[-1]
-        results.append({
+        row = {
             "name": name, "us_per_call": round(us, 1),
             "final_loss": round(final[2], 4), "bits": final[1],
             "rounds": int(st.sync_rounds), "trigger_events": int(st.triggers),
             "trace": trace,
-        })
+        }
+        row.update(contract_status(cfg, d, bits=row["bits"],
+                                   sync_rounds=row["rounds"],
+                                   trigger_events=row["trigger_events"]))
+        results.append(row)
 
     # SPARQ-SGD: H=5 local steps + trigger + SignTopK (the paper's headline).
     # The threshold scales with the problem: c_t eta_t^2 must be commensurate
@@ -93,7 +98,7 @@ def run_bench(quick: bool = True) -> List[Dict]:
     target = max(r["trace"][-1][2] for r in results) + 1e-9
 
     def bits_to_target(trace):
-        for t, bits, ls, *rest in trace:
+        for _t, bits, ls, *_rest in trace:
             if ls <= target:
                 return bits
         return float("inf")

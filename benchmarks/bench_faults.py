@@ -29,6 +29,7 @@ from typing import Dict, List
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.contracts import contract_status
 from repro.core import baselines, engine
 from repro.core.compression import SignTopK
 from repro.core.faults import DropoutWindow, FaultPlan
@@ -70,28 +71,33 @@ def run_bench(quick: bool = True) -> List[Dict]:
 
     results = []
 
-    def record(name, method, step_fn, init_state, faults, **extra):
+    def record(name, method, step_fn, init_state, faults, cfg=None, **extra):
         """One row schema for every method — a schema change lands once."""
         runner = engine.make_runner(step_fn, T, record_every=rec,
                                     eval_fn=eval_fn)
         st, trace, us = engine.timed_run(runner, init_state, key, T)
-        results.append({
+        row = {
             "name": name, "us_per_call": round(us, 1), "method": method,
             "final_loss": round(trace[-1][2], 4), "bits": trace[-1][1],
             "trigger_events": int(getattr(st, "triggers", T * n)),
             "sync_rounds": int(getattr(st, "sync_rounds", T)),
-            **fault_cols(faults), "trace": trace, **extra})
+            **fault_cols(faults), "trace": trace, **extra}
+        if cfg is not None:
+            row.update(contract_status(cfg, d, bits=row["bits"],
+                                       sync_rounds=row["sync_rounds"],
+                                       trigger_events=row["trigger_events"]))
+        results.append(row)
 
     def record_sparq(name, faults):
         cfg = SparqConfig(topology=topo, compressor=comp, threshold=thr,
                           lr=lr, H=5, faults=faults)
         record(name, "sparq", make_step(cfg, grad_fn),
-               lambda: cfg.init_state(x0), faults)
+               lambda: cfg.init_state(x0), faults, cfg=cfg)
 
     def record_choco(name, faults):
         cfg = baselines.choco_config(topo, comp, lr, faults=faults)
         record(name, "choco", make_step(cfg, grad_fn),
-               lambda: cfg.init_state(x0), faults)
+               lambda: cfg.init_state(x0), faults, cfg=cfg)
 
     def record_vanilla(name, faults):
         record(name, "vanilla",

@@ -23,13 +23,13 @@ from typing import Dict, List
 
 import jax
 
+from benchmarks.lm_workload import make_lm_workload
+from repro.analysis.contracts import contract_status
 from repro.core import baselines, engine
 from repro.core.compression import TopFrac
 from repro.core.sparq import SparqConfig, make_step, squarm_config
 from repro.core.triggers import piecewise
 from repro.optim.sgd import momentum
-
-from benchmarks.lm_workload import make_lm_workload
 
 
 def run_bench(quick: bool = True) -> List[Dict]:
@@ -43,12 +43,17 @@ def run_bench(quick: bool = True) -> List[Dict]:
                                     record_every=rec, eval_fn=wl.eval_fn)
         st, trace, us = engine.timed_run(
             runner, lambda: cfg_s.init_state(wl.flat0), key, T)
-        results.append({
+        row = {
             "name": name, "us_per_call": round(us, 1),
             "optimizer": cfg_s.resolved_optimizer().name,
             "final_loss": round(trace[-1][2], 4), "bits": trace[-1][1],
             "trigger_events": int(st.triggers),
-            "sync_rounds": int(st.sync_rounds), "trace": trace})
+            "sync_rounds": int(st.sync_rounds), "trace": trace}
+        row.update(contract_status(cfg_s, int(wl.flat0.size),
+                                   bits=row["bits"],
+                                   sync_rounds=row["sync_rounds"],
+                                   trigger_events=row["trigger_events"]))
+        results.append(row)
 
     comp = TopFrac(frac=0.1)
     thr = piecewise(2.0, 1.0, every=max(T // 6, 1), until=T)

@@ -17,6 +17,7 @@ from typing import Dict, List
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.contracts import contract_status
 from repro.core import engine
 from repro.core.compression import SignTopK
 from repro.core.schedule import decaying
@@ -69,7 +70,7 @@ def run_bench(quick: bool = True) -> List[Dict]:
             runner, lambda: cfg.init_state(x0), jax.random.PRNGKey(0), T)
         xbar = jnp.mean(st.x, 0)
         consensus = float(jnp.linalg.norm(st.x - xbar[None]))
-        rows.append({
+        row = {
             "name": f"topology_{kind}", "us_per_call": round(us, 1),
             # delta_eff == delta of the single matrix for static plans
             "delta": round(plan.delta_eff, 4),
@@ -80,8 +81,14 @@ def run_bench(quick: bool = True) -> List[Dict]:
             "final_loss": round(float(eval_fn(xbar)), 4),
             "consensus_err": round(consensus, 4),
             "bits": float(st.bits),
+            "rounds": int(st.sync_rounds),
+            "trigger_events": int(st.triggers),
             "trace": trace.to_dict(),
-        })
+        }
+        row.update(contract_status(cfg, f * c, bits=row["bits"],
+                                   sync_rounds=row["rounds"],
+                                   trigger_events=row["trigger_events"]))
+        rows.append(row)
     return rows
 
 

@@ -17,9 +17,9 @@ import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
+from repro.configs.registry import get_config
 from repro.core.schedule import warmup_piecewise
 from repro.core.topology import Topology, make_topology
-from repro.configs.registry import get_config
 from repro.data.synthetic import TokenPipeline
 from repro.models.transformer import init_params, lm_loss
 

@@ -25,7 +25,11 @@ import json
 import os
 import time
 
-SCHEMA_VERSION = 1
+# 2: rows carry contract_status (repro.analysis R6-R9 verdict) and
+# bits_oracle (the closed-form [lo, hi] bits interval the charged bits must
+# sit in; see analysis/comm_lint.py) — "n/a" / null for rows without a
+# SparqConfig (vanilla baselines, kernels, roofline)
+SCHEMA_VERSION = 2
 
 
 def _finite(obj):
@@ -72,10 +76,48 @@ def write_artifact(out_dirs, suite: str, quick: bool, rows,
     return paths
 
 
+def check_artifacts(dirs) -> int:
+    """Re-validate committed BENCH_*.json artifacts: every row's
+    contract_status must be green (ok / warn / n/a — an error(R..) or
+    bits-mismatch verdict must never be committed) and a row's charged bits
+    must sit inside its stored closed-form oracle interval. Static — reads
+    JSON only — so a hand-edited bits column or a stale artifact fails fast
+    without re-running the suites. Returns the number of bad rows."""
+    import glob
+    bad = checked = 0
+    for dir_ in dirs:
+        for path in sorted(glob.glob(os.path.join(dir_, "BENCH_*.json"))):
+            with open(path) as f:
+                doc = json.load(f)
+            for row in doc.get("rows", []):
+                checked += 1
+                status = str(row.get("contract_status", "n/a"))
+                if status not in ("ok", "n/a") and \
+                        not status.startswith("warn("):
+                    bad += 1
+                    print(f"[check] {path}: row {row.get('name')!r}: "
+                          f"contract_status={status}")
+                oracle = row.get("bits_oracle")
+                if isinstance(oracle, dict):
+                    lo, hi = float(oracle["lo"]), float(oracle["hi"])
+                    bits = float(row.get("bits", oracle["bits"]))
+                    if not (lo * (1 - 1e-6) <= bits <= hi * (1 + 1e-6)):
+                        bad += 1
+                        print(f"[check] {path}: row {row.get('name')!r}: "
+                              f"bits {bits:.1f} outside the oracle interval "
+                              f"[{lo:.1f}, {hi:.1f}]")
+    print(f"[check] {checked} row(s) checked, {bad} bad")
+    return bad
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--check-artifacts", action="store_true",
+                    help="validate the committed BENCH_*.json artifacts "
+                         "(contract_status green, bits inside the stored "
+                         "oracle interval) and exit; no suite runs")
     ap.add_argument("--suite", default="all",
                     choices=["all", "convex", "nonconvex", "momentum",
                              "ablation", "topology", "faults", "kernels",
@@ -89,6 +131,13 @@ def main(argv=None) -> None:
                     help="CSV to stdout only; skip BENCH_*.json")
     args = ap.parse_args(argv)
     quick = not args.full
+
+    if args.check_artifacts:
+        dirs = list(dict.fromkeys(
+            d for d in (args.root_dir, args.out_dir) if d))
+        if check_artifacts(dirs):
+            raise SystemExit(1)
+        return
 
     from benchmarks import (bench_ablation, bench_convex, bench_faults,
                             bench_kernels, bench_momentum, bench_nonconvex,
@@ -118,6 +167,11 @@ def main(argv=None) -> None:
             any_error = True
             print(f"{sname}_ERROR,0,\"{err}\"")
         elapsed = time.perf_counter() - t0
+        for r in rows:
+            # rows without a SparqConfig (vanilla baselines, kernel
+            # microbenches, roofline) have no theory contract to certify
+            r.setdefault("contract_status", "n/a")
+            r.setdefault("bits_oracle", None)
         if not args.no_artifacts:
             dirs = [args.out_dir] + ([args.root_dir] if args.root_dir else [])
             write_artifact(dirs, sname, quick, rows, elapsed, err)

@@ -43,7 +43,7 @@ def _leaf_labels(tree) -> List[str]:
             for kp, _ in jax.tree_util.tree_leaves_with_path(tree)]
 
 
-def audit_core(topo_kind: str, steps: int) -> Report:
+def audit_core(topo_kind: str, steps: int, contracts: bool = False) -> Report:
     from repro.core import engine as engine_mod
     from repro.core import sparq
     from repro.core.compression import TopFrac
@@ -93,6 +93,14 @@ def audit_core(topo_kind: str, steps: int) -> Report:
     report.extend(hlo_lint.lint_transfers(hlo, program=report.program))
     report.meta["entry_params"] = len(hlo_walk_params(hlo))
     report.meta["donated_params"] = n_state
+
+    if contracts:
+        # R6-R9 on the same config the lowering audit just certified
+        from repro.analysis import contracts as contracts_mod
+        cf, cmeta = contracts_mod.lint_contracts(cfg, CORE_D,
+                                                 program=report.program)
+        report.extend(cf)
+        report.meta["contracts"] = cmeta
     return report
 
 
@@ -101,7 +109,8 @@ def hlo_walk_params(hlo: str):
     return hlo_walk.entry_parameters(hlo)
 
 
-def audit_dist(variant: str, arch: str, use_kernel: bool) -> Report:
+def audit_dist(variant: str, arch: str, use_kernel: bool,
+               contracts: bool = False) -> Report:
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.configs.registry import get_config
@@ -117,7 +126,7 @@ def audit_dist(variant: str, arch: str, use_kernel: bool) -> Report:
     mesh = sh.train_mesh(prod, cfg)
     dcfg = DistSparqConfig(H=2, variant=variant, frac=0.25,
                            use_kernel=use_kernel)
-    init_fn, train_step, state_specs, _ = build_sparq(cfg, mesh, dcfg)
+    init_fn, train_step, state_specs, pshape = build_sparq(cfg, mesh, dcfg)
     report.meta["interpret"] = train_step.interpret
 
     state_sds = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
@@ -176,6 +185,29 @@ def audit_dist(variant: str, arch: str, use_kernel: bool) -> Report:
             lambda: None, counted, calls=0, program=report.program))
     report.meta["traces"] = counted.count
     report.meta["donated_params"] = n_state
+
+    if contracts:
+        from repro.analysis import comm_lint
+        from repro.analysis import contracts as contracts_mod
+        # R6-R9 at the true model dimension and resolved ensemble size
+        cf, cmeta = contracts_mod.lint_contracts(
+            dcfg, train_step.d_model_total, n=train_step.n_nodes,
+            program=report.program)
+        report.extend(cf)
+        report.meta["contracts"] = cmeta
+        # R10 (dist leg): the engine's charged payload vs the per-leaf
+        # closed-form sum (the kernel path charges blockwise — different
+        # formula by design, certified via the core fixtures instead)
+        if not train_step.use_kernel:
+            report.extend(comm_lint.lint_dist_payload(
+                dcfg.resolved_compressor(), pshape, train_step.payload_bits,
+                program=report.program))
+        # R11: node-axis bytes of the compiled module vs the bits model
+        f11, m11 = comm_lint.lint_collectives(
+            hlo, list(mesh.shape.items()), n_nodes=train_step.n_nodes,
+            d_model_total=train_step.d_model_total, program=report.program)
+        report.extend(f11)
+        report.meta["collectives"] = m11
     return report
 
 
@@ -194,6 +226,12 @@ def main(argv=None) -> int:
     ap.add_argument("--steps", type=int, default=8,
                     help="core-engine trajectory length (kept tiny: the "
                          "audit reads artifacts, it does not benchmark)")
+    ap.add_argument("--contracts", action="store_true",
+                    help="additionally run the theory-contract and "
+                         "bit-accounting rules (R6-R11): committed-config "
+                         "certification, the closed-form bits oracle, and "
+                         "the uncharged-collective walk of the dist "
+                         "lowering")
     ap.add_argument("--no-kernel", action="store_true",
                     help="audit the dist step without the Pallas kernel "
                          "path (R5 then has nothing to check)")
@@ -207,13 +245,26 @@ def main(argv=None) -> int:
         print(f"[analysis] auditing core/make_runner "
               f"(topology={args.config}, n={CORE_N}, d={CORE_D})",
               flush=True)
-        reports.append(audit_core(args.config, args.steps))
+        reports.append(audit_core(args.config, args.steps,
+                                  contracts=args.contracts))
     if args.engine in ("dist", "both"):
         variant = "ring" if args.config == "ring" else "dense"
         print(f"[analysis] auditing dist/train_step (variant={variant}, "
               f"arch={args.arch}, kernel={not args.no_kernel})", flush=True)
         reports.append(audit_dist(variant, args.arch,
-                                  use_kernel=not args.no_kernel))
+                                  use_kernel=not args.no_kernel,
+                                  contracts=args.contracts))
+    if args.contracts:
+        from repro.analysis import comm_lint
+        from repro.analysis import contracts as contracts_mod
+        print("[analysis] certifying committed configs (R6-R9) and the "
+              "bits oracle (R10)", flush=True)
+        reports.extend(contracts_mod.audit_contracts())
+        oracle = Report(program="comm/bits_oracle")
+        f10, m10 = comm_lint.lint_bits_oracle(program=oracle.program)
+        oracle.extend(f10)
+        oracle.meta.update(m10)
+        reports.append(oracle)
 
     suppressions = default_suppressions(jax.default_backend())
     for r in reports:

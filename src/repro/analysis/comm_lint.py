@@ -1,0 +1,336 @@
+"""Static bit-accounting oracle (R10) + uncharged-collective lint (R11).
+
+The paper's headline result is a bits-transmitted number, so the repo's bit
+accounting (core/bits.py + the engines' ``sync_message_bits`` charging) is a
+measured claim that can silently drift from what the program actually sends.
+Two independent checks pin it:
+
+* **R10 — closed-form oracle.** The expected bits of a trajectory are fully
+  determined by (plan degrees, payload bits, flag bits, fault deg_eff): sync
+  round ``r`` happens at step ``t = (r+1)H - 1`` and the fault masks are pure
+  functions of ``(seed, t, r)`` (core/faults.py determinism contract), so the
+  whole charge sequence is recomputable offline. This module derives it in
+  plain numpy — sharing only the FLAG/FLOAT constants with the runtime — and
+  R10 cross-checks a short real trace against it, plus every registry
+  compressor's ``bits(d)`` against an independently written payload formula.
+* **R11 — uncharged collectives.** The dist lowering's communication ops are
+  resolved to mesh axes via the hlo_walk collective views (both
+  replica-group syntaxes + collective-permute source/target pairs). Bytes
+  moving along the ``node`` axis are wire traffic the bits model must
+  represent: gossip-kind ops (all-gather / collective-permute of x_hat) must
+  fit a budget derived from the model size, scalar all-reduces get a small
+  documented metrics allowance, and anything else is an unexplained
+  communication op — the drift class that would falsify every BENCH_*
+  communication-savings claim. Intra-node (model/fsdp-axis) resharding is
+  accelerator-fabric traffic, not gossip, and is reported but not charged.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.analysis.rules import Finding, finding
+from repro.core import bits as bits_mod
+from repro.core.compression import (QSGD, Compressor, Identity, QsTopK, RandK,
+                                    Sign, SignTopK, TopFrac, TopK)
+from repro.core.faults import FaultPlan
+from repro.core.topology import GossipPlan
+
+# --------------------------------------------------------------- payload oracle
+#
+# Independent re-derivation of each registry operator's message size, written
+# out against the docstring conventions of core/bits.py rather than by calling
+# its helpers — so a drifted formula cannot certify itself.
+
+_F = 32.0  # fp32 value / scale / norm / seed
+
+
+def _idx_bits(d: int, k: int) -> float:
+    return k * math.ceil(math.log2(max(d, 2)))
+
+
+def derive_payload_bits(comp: Compressor, d: int) -> Optional[float]:
+    """Closed-form payload bits for one compressed d-vector, or None for a
+    compressor outside the registry (nothing to cross-check against)."""
+    d = int(d)
+    if isinstance(comp, TopFrac):             # before SignTopK: subclass
+        k = max(1, math.ceil(comp.frac * d))
+        return k + _idx_bits(d, k) + _F       # k signs + k indices + scale
+    if isinstance(comp, (SignTopK,)):
+        k = min(comp.k, d)
+        return k + _idx_bits(d, k) + _F
+    if isinstance(comp, QsTopK):
+        k = min(comp.k, d)
+        return _idx_bits(d, k) + _F + k * (1 + math.ceil(math.log2(comp.s + 1)))
+    if isinstance(comp, TopK):
+        k = min(comp.k, d)
+        return k * _F + _idx_bits(d, k)       # k values + k indices
+    if isinstance(comp, RandK):
+        return _F * min(comp.k, d) + _F       # k values + shared 32b seed
+    if isinstance(comp, Sign):
+        return d + _F                         # d sign bits + scale
+    if isinstance(comp, QSGD):
+        return _F + d * (1 + math.ceil(math.log2(comp.s + 1)))
+    if isinstance(comp, Identity):
+        return _F * d
+    return None
+
+
+# ----------------------------------------------------------- trajectory oracle
+
+def _round_degrees(plan: GossipPlan, faults: Optional[FaultPlan], H: int,
+                   rounds: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(deg, live) of shape (rounds, n) — the exact quantities the engines
+    charge with at each sync round: the active round's degrees,
+    fault-repaired through the (seed, t, r) masks when a fault plan is live
+    (sync round r happens at step t = (r+1)H - 1; core/faults.py is a pure
+    function of that pair, which is what makes this offline recomputation
+    exact). The fault path is one vmapped device call, not a Python loop."""
+    ridx = np.arange(int(rounds))
+    if faults is None:
+        deg = np.asarray(plan.degrees, np.float64)[ridx % plan.R]
+        return deg, np.ones((len(ridx), plan.n), bool)
+    import jax
+    import jax.numpy as jnp
+    ws = jnp.asarray(plan.ws, jnp.float32)[ridx % plan.R]
+    ts = jnp.asarray((ridx + 1) * int(H) - 1, jnp.int32)
+    rs = jnp.asarray(ridx, jnp.int32)
+    _w, deg_eff, live = jax.vmap(faults.apply)(ws, ts, rs)
+    return np.asarray(deg_eff, np.float64), np.asarray(live, bool)
+
+
+def expected_trace(plan: GossipPlan, faults: Optional[FaultPlan], H: int,
+                   payload_bits: float, T: int) -> Dict[str, float]:
+    """Exact expected (bits, sync_rounds, triggers) of a T-step trajectory in
+    the always-trigger regime (zero threshold, generically nonzero
+    residuals): every live node triggers at every sync round, and each node
+    is charged ``deg * (FLAG + trig * payload)`` per round — the exact
+    ``sync_message_bits`` formula, evaluated offline."""
+    rounds = T // int(H)
+    deg, live = _round_degrees(plan, faults, int(H), rounds)
+    total = float(np.sum(deg * (bits_mod.FLAG_BITS
+                                + live.astype(np.float64) * payload_bits)))
+    return {"bits": total, "sync_rounds": rounds,
+            "triggers": int(live.sum())}
+
+
+def bits_interval(plan: GossipPlan, faults: Optional[FaultPlan], H: int,
+                  payload_bits: float, sync_rounds: int, trigger_events: int
+                  ) -> Tuple[float, float]:
+    """[lo, hi] bounds on the bits a trace with the realized
+    ``(sync_rounds, trigger_events)`` must have charged.
+
+    The flag part is exact (every node pays FLAG per live link every sync
+    round, triggered or not); the payload part is bounded by distributing the
+    realized trigger events over the smallest/largest live per-node degrees
+    in the executed rounds. Static fault-free uniform-degree plans collapse
+    the interval to a point."""
+    deg, live = _round_degrees(plan, faults, int(H), int(sync_rounds))
+    flag_total = bits_mod.FLAG_BITS * float(deg.sum())
+    deg_min = float(deg[live].min()) if live.any() else 0.0
+    deg_max = float(deg[live].max()) if live.any() else 0.0
+    k = float(trigger_events) * float(payload_bits)
+    return flag_total + k * deg_min, flag_total + k * deg_max
+
+
+# ------------------------------------------------------------------------- R10
+
+def lint_bits_oracle(*, program: str, n: int = 8, d: int = 256, T: int = 12
+                     ) -> Tuple[List[Finding], Dict[str, Any]]:
+    """R10: run the reference engine for a short trace on a clean and a
+    faulty fixture and require the charged bits to match the closed-form
+    oracle exactly (the trace is short enough that Kahan-compensated float32
+    accumulation is exact); additionally cross-check every registry
+    compressor's ``bits(d)`` against the independent payload derivation."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.compression import _REGISTRY
+    from repro.core.faults import DropoutWindow
+    from repro.core.schedule import fixed
+    from repro.core.sparq import SparqConfig, run_scan
+    from repro.core.topology import make_topology
+    from repro.core.triggers import zero
+
+    out: List[Finding] = []
+    meta: Dict[str, Any] = {"fixtures": {}, "payload_checks": 0}
+
+    # ---- registry payload formulas
+    probes: List[Compressor] = [
+        Identity(), TopK(k=10), RandK(k=10), Sign(), QSGD(s=16),
+        SignTopK(k=10), QsTopK(k=10, s=16), TopFrac(frac=0.25),
+    ]
+    assert len(probes) == len(_REGISTRY)
+    for comp in probes:
+        for dd in (64, 1024, 65536):
+            want = derive_payload_bits(comp, dd)
+            got = float(comp.bits(dd))
+            meta["payload_checks"] += 1
+            if want is None or abs(got - want) > 0.5:
+                out.append(finding(
+                    "R10", f"payload drift for {comp.name!r} at d={dd}: "
+                           f"runtime bits(d) = {got:.1f}, derived formula = "
+                           f"{want}", program))
+
+    # ---- short-trace fixtures: always-trigger regime, distinct per-node x0
+    # and a constant gradient keep every residual generically nonzero
+    ring = make_topology("ring", n)
+    comp = SignTopK(k=10)
+    fixtures = {
+        "clean": None,
+        "faulty": FaultPlan(link_drop=0.3, stragglers=(1,),
+                            straggler_frac=0.5,
+                            dropout=(DropoutWindow(2, 4, 8),), seed=0),
+    }
+    x0 = (np.arange(n * d, dtype=np.float32).reshape(n, d) / (n * d)) + 0.1
+    for name, faults in fixtures.items():
+        cfg = SparqConfig(topology=ring, compressor=comp, threshold=zero(),
+                          lr=fixed(0.05), H=2, gamma=0.2, faults=faults)
+        st = run_scan(cfg, lambda x, t, key: jnp.ones_like(x),
+                      jnp.asarray(x0), T, jax.random.PRNGKey(0))
+        want = expected_trace(cfg.resolved_plan(),
+                              faults if faults and not faults.is_null else None,
+                              cfg.H, float(comp.bits(d)), T)
+        got = {"bits": float(st.bits), "sync_rounds": int(st.sync_rounds),
+               "triggers": int(st.triggers)}
+        meta["fixtures"][name] = {"oracle": want, "trace": got}
+        for key in ("sync_rounds", "triggers"):
+            if got[key] != want[key]:
+                out.append(finding(
+                    "R10", f"{name} fixture: traced {key} = {got[key]} != "
+                           f"oracle {want[key]}", program))
+        if abs(got["bits"] - want["bits"]) > 1e-6 * max(want["bits"], 1.0):
+            out.append(finding(
+                "R10", f"{name} fixture: traced bits = {got['bits']:.1f} != "
+                       f"closed-form oracle {want['bits']:.1f} (plan degrees "
+                       f"x (flag + trig * payload) over {want['sync_rounds']} "
+                       f"rounds)", program))
+    return out, meta
+
+
+def lint_dist_payload(comp: Compressor, pshape: Any, payload_bits: float,
+                      *, program: str) -> List[Finding]:
+    """R10 (dist leg): the payload the distributed engine charges per
+    triggered node per sync must equal the per-leaf closed-form sum."""
+    import jax
+    want = 0.0
+    for leaf in jax.tree.leaves(pshape):
+        dd = math.prod(leaf.shape) or 1
+        per = derive_payload_bits(comp, dd)
+        if per is None:
+            return []  # custom operator: nothing independent to derive
+        want += per
+    out: List[Finding] = []
+    if abs(payload_bits - want) > 0.5:
+        out.append(finding(
+            "R10", f"dist payload drift: engine charges {payload_bits:.1f} "
+                   f"bits/node/sync, per-leaf derivation gives {want:.1f}",
+            program))
+    return out
+
+
+# ------------------------------------------------------------------------- R11
+
+# node-axis all-reduce allowance: scalar loss/metric reductions (a few f32/s32
+# scalars per step) — anything bigger riding the node axis is not "metrics"
+_METRICS_ALLOWANCE_BYTES = 64 * 1024
+# gossip-kind budget: one full x_hat ensemble (n * d * 4 bytes) can legally be
+# materialized a few times per step (cond-branch duplication, gather + permute
+# lowerings of the same mix); beyond that the lowering is moving bytes the
+# bits model never charges
+_GOSSIP_BUDGET_FACTOR = 3.0
+# interpret-mode Pallas simulates the on-chip kernel with whole-array
+# collectives — simulation artifacts, not wire traffic (same rationale as the
+# sanctioned off-TPU R5 suppression)
+_INTERPRET_MARKERS = ("sign_topk", "pallas")
+
+
+def _varying_axes(groups: Optional[List[List[int]]],
+                  pairs: Optional[List[Tuple[int, int]]],
+                  sizes: List[int]) -> frozenset:
+    """Indices of mesh axes along which a collective moves data: the axes
+    whose coordinate differs between devices of one group (or one
+    source/target pair). Device numbers are positions in the mesh's
+    flattened device order, so coordinates are the row-major unraveling."""
+    axes: set = set()
+    members: List[List[int]] = []
+    if groups:
+        members.extend(g for g in groups if len(g) > 1)
+    if pairs:
+        members.extend([list(p) for p in pairs])
+    for grp in members:
+        coords = np.stack([np.unravel_index(i, sizes) for i in grp])
+        for ax in range(len(sizes)):
+            if len(np.unique(coords[:, ax])) > 1:
+                axes.add(ax)
+    return frozenset(axes)
+
+
+def lint_collectives(hlo: str, axis_sizes: Sequence[Tuple[str, int]], *,
+                     n_nodes: int, d_model_total: int, program: str,
+                     node_axis: str = "node", xhat_bytes_per_elem: int = 4,
+                     budget_factor: float = _GOSSIP_BUDGET_FACTOR,
+                     ) -> Tuple[List[Finding], Dict[str, Any]]:
+    """R11: classify every communication op of the dist lowering by mesh axis
+    and require zero node-axis bytes outside the gossip budget + metrics
+    allowance (see module docstring). ``axis_sizes`` is the ordered
+    ``mesh.shape`` items."""
+    from repro.launch import hlo_walk
+
+    names = [a for a, _ in axis_sizes]
+    sizes = [int(s) for _, s in axis_sizes]
+    try:
+        node_ix = names.index(node_axis)
+    except ValueError:
+        return [], {"note": f"mesh has no {node_axis!r} axis: single-node "
+                            f"lowering, nothing to lint"}
+
+    budget = budget_factor * n_nodes * d_model_total * xhat_bytes_per_elem
+    meta: Dict[str, Any] = {
+        "ops": 0, "node_gossip_bytes": 0.0, "node_metrics_bytes": 0.0,
+        "internal_bytes": 0.0, "interpret_sim_bytes": 0.0,
+        "gossip_budget_bytes": float(budget), "unexplained_bytes": 0.0,
+        "while_reachable_ops": 0, "by_kind": {},
+    }
+    out: List[Finding] = []
+    for op in hlo_walk.collective_ops(hlo):
+        meta["ops"] += 1
+        if op["while_reachable"]:
+            meta["while_reachable_ops"] += 1
+        nbytes = float(op["result_bytes"])
+        kind = str(op["kind"])
+        meta["by_kind"][kind] = meta["by_kind"].get(kind, 0.0) + nbytes
+        opn = str(op["op_name"]).lower()
+        if any(mark in opn for mark in _INTERPRET_MARKERS):
+            meta["interpret_sim_bytes"] += nbytes
+            continue
+        axes = _varying_axes(op["groups"], op["pairs"], sizes)
+        if node_ix not in axes:
+            meta["internal_bytes"] += nbytes
+            continue
+        loc = f"{program}:{op['computation']}"
+        if kind in ("all-gather", "collective-permute"):
+            meta["node_gossip_bytes"] += nbytes
+        elif kind == "all-reduce" and nbytes <= _METRICS_ALLOWANCE_BYTES:
+            meta["node_metrics_bytes"] += nbytes
+        else:
+            meta["unexplained_bytes"] += nbytes
+            out.append(finding(
+                "R11", f"uncharged node-axis {kind} of {nbytes:.0f} bytes "
+                       f"({'while-reachable' if op['while_reachable'] else 'top-level'}"
+                       f", groups over mesh axes "
+                       f"{sorted(names[a] for a in axes)}): not representable "
+                       f"in the gossip bits model", loc))
+    excess = meta["node_gossip_bytes"] - budget
+    if excess > 0:
+        meta["unexplained_bytes"] += excess
+        out.append(finding(
+            "R11", f"node-axis gossip traffic {meta['node_gossip_bytes']:.0f} "
+                   f"bytes exceeds the x_hat exchange budget {budget:.0f} "
+                   f"({budget_factor:.0f} x n_nodes x d_model x "
+                   f"{xhat_bytes_per_elem}B) by {excess:.0f} bytes: the "
+                   f"lowering moves model-scale data the bits model never "
+                   f"charges", program))
+    return out, meta

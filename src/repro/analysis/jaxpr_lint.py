@@ -128,7 +128,8 @@ def lint_carry_dtypes(in_tree_leaves, out_tree_leaves, *,
             f"carry structure changed: {len(in_tree_leaves)} leaves in, "
             f"{len(out_tree_leaves)} out", location=program))
         return out
-    for name, a, b in zip(labels, in_tree_leaves, out_tree_leaves):
+    for name, a, b in zip(labels, in_tree_leaves, out_tree_leaves,
+                          strict=False):
         if a.dtype != b.dtype:
             out.append(finding(
                 "R2",

@@ -26,6 +26,40 @@ id, a severity, and a one-line contract, so findings are machine-diffable
   kernel op-by-op (the off-TPU CI fallback, sanctioned there via a documented
   suppression).
 
+The theory-contract / communication passes (analysis/contracts.py and
+analysis/comm_lint.py) lint the *algorithm configuration* rather than the
+lowered program:
+
+* **R6 mixing-matrix-contract** — every gossip round's W is symmetric,
+  doubly stochastic, non-negative, the plan's effective spectral gap
+  delta_eff is > 0, and fault-repaired supports (core/faults.py ``apply``)
+  remain doubly stochastic for sampled (seed, round) draws; SPARQ-SGD's
+  Theorems 1-2 assume exactly this matrix class.
+* **R7 omega-certificate** — each compressor carries a contraction
+  certificate omega(d) in (0, 1] (analytic for the registry operators,
+  sampled lower bound otherwise) that empirical E||x - C(x)||^2 draws must
+  not refute, and the resolved consensus step gamma is cross-checked against
+  the Lemma-6 bound gamma*(delta_eff, beta, omega) at the TRUE model d
+  (gamma above the bound is a warning: it voids the stated rate, not the
+  run).
+* **R8 trigger-schedule-contract** — the threshold sequence c_t satisfies
+  the paper's condition c_t = o(t) (Theorem 1 needs c_t <= c0 * t^(1-eps)),
+  H >= 1, and a zero threshold is noted as the CHOCO-SGD reduction.
+* **R9 config-combination** — cross-field rules that are individually valid
+  but jointly wrong or lossy: use_kernel with faults falls back to the dense
+  mix, a stochastic compressor needs an explicit seed, etc.
+* **R10 bits-oracle** — the closed-form expected-bits-per-sync derivation
+  (plan degrees x (flag + trigger * payload), fault deg_eff) must agree with
+  the runtime core/bits.py accounting on a short symbolic trace, and each
+  registry compressor's ``bits(d)`` must match its independently re-derived
+  payload formula; drift here falsifies every BENCH bits column.
+* **R11 uncharged-collective** — every communication op in the dist
+  lowering (all-gather / collective-permute / all-reduce, resolved to mesh
+  axes via the hlo_walk collective views) that moves bytes along the node
+  axis must be attributable to the gossip bits model (x_hat exchange) or a
+  documented small-bytes metrics allowance; unexplained node-axis bytes
+  mean the wire cost and the charged bits have drifted apart.
+
 Suppressions are explicit and documented: a ``{rule_id: reason}`` mapping (or
 ``{rule_id: {"match": substring, "reason": ...}}``) downgrades matching
 findings to ``suppressed`` — they stay in the report, they stop failing it.
@@ -65,6 +99,30 @@ RULES: Dict[str, Rule] = {r.rule_id: r for r in (
     Rule("R5", "interpret-leak", ERROR,
          "use_kernel=True must lower to a compiled Pallas custom call, "
          "not interpret-mode simulation"),
+    Rule("R6", "mixing-matrix-contract", ERROR,
+         "every gossip round is symmetric, doubly stochastic and "
+         "non-negative, delta_eff > 0, and fault-repaired supports stay "
+         "doubly stochastic for sampled (seed, round) draws"),
+    Rule("R7", "omega-certificate", ERROR,
+         "each compressor's contraction certificate omega(d) in (0, 1] is "
+         "not refuted empirically, and the resolved gamma is checked "
+         "against the Lemma-6 bound gamma*(delta, beta, omega) at the true "
+         "model d (above-bound gamma is a warning)"),
+    Rule("R8", "trigger-schedule-contract", ERROR,
+         "the trigger threshold satisfies c_t = o(t) (Theorem 1), H >= 1; "
+         "a zero threshold is noted as the CHOCO-SGD reduction"),
+    Rule("R9", "config-combination", WARNING,
+         "cross-field combinations that are individually valid but jointly "
+         "lossy are acknowledged (kernel+faults dense fallback, stochastic "
+         "compressor without an explicit seed, ...)"),
+    Rule("R10", "bits-oracle", ERROR,
+         "closed-form expected bits (degrees x (flag + trigger * payload), "
+         "fault deg_eff) match the runtime core/bits.py accounting on a "
+         "short symbolic trace, and registry bits(d) formulas re-derive"),
+    Rule("R11", "uncharged-collective", ERROR,
+         "every node-axis communication op in the dist lowering is "
+         "attributable to the gossip bits model (or the documented "
+         "small-bytes metrics allowance); zero unexplained bytes"),
 )}
 
 
@@ -166,7 +224,9 @@ def render_report(reports: Iterable[Report],
         for k, v in r.counts().items():
             totals[k] += v
     doc: Dict[str, object] = {
-        "schema_version": 1,
+        # 2: R6-R11 contract/communication rules joined the catalog
+        # (schema 1 carried R1-R5 only)
+        "schema_version": 2,
         "rules": {rid: {"title": r.title, "severity": r.severity,
                         "contract": r.contract}
                   for rid, r in RULES.items()},

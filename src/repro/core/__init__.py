@@ -2,10 +2,10 @@
 from repro.core.compression import (Compressor, Identity, QSGD, QsTopK, RandK,
                                     Sign, SignTopK, TopFrac, TopK,
                                     make_compressor)
-from repro.core.schedule import (LRSchedule, decaying, fixed, is_sync,
-                                 theorem1_lr, theorem2_lr, warmup_piecewise)
 from repro.core.engine import Trace, make_runner, run_traced, timed_run
 from repro.core.faults import DropoutWindow, FaultPlan, resolve_faults
+from repro.core.schedule import (LRSchedule, decaying, fixed, is_sync,
+                                 theorem1_lr, theorem2_lr, warmup_piecewise)
 from repro.core.sparq import (SparqConfig, SparqState, init_state, make_step,
                               run, run_loop, run_scan, squarm_config)
 from repro.core.topology import (GossipPlan, Topology, make_plan,

@@ -49,7 +49,8 @@ class VanillaState(NamedTuple):
 def make_vanilla_step(topology: Topology, lr: LRSchedule, grad_fn: GradFn,
                       momentum: float = 0.0,
                       optimizer: Optional[Optimizer] = None,
-                      faults: Optional[FaultPlan] = None):
+                      faults: Optional[FaultPlan] = None
+                      ) -> Callable[[VanillaState, jax.Array], VanillaState]:
     """Decentralized vanilla SGD: exact neighbor averaging every step.
 
     The local update runs through the shared optimizer seam; ``momentum`` is
@@ -106,7 +107,8 @@ class CentralState(NamedTuple):
 
 def make_central_step(n: int, lr: LRSchedule, grad_fn: GradFn,
                       momentum: float = 0.0,
-                      optimizer: Optional[Optimizer] = None):
+                      optimizer: Optional[Optimizer] = None
+                      ) -> Callable[[CentralState, jax.Array], CentralState]:
     """Centralized minibatch SGD over the same n data shards (rate target)."""
     opt = resolve_optimizer(optimizer, momentum)
 
@@ -134,8 +136,11 @@ def init_central(x0: jax.Array,
                         t=jnp.int32(0), bits=bits0, bits_c=bits_c0)
 
 
-def run_generic(step, state, T: int, key: jax.Array, record_every: int = 0,
-                eval_fn=None, x_of=lambda s: s.x):
+def run_generic(step: Callable[[Any, jax.Array], Any], state: Any, T: int,
+                key: jax.Array, record_every: int = 0,
+                eval_fn: Optional[Callable[[jax.Array], jax.Array]] = None,
+                x_of: Callable[[Any], jax.Array] = lambda s: s.x
+                ) -> Tuple[Any, engine.Trace]:
     """Chunked-scan driver for any baseline step (core/engine.py): the whole
     trajectory is one XLA program, traces are recorded in-graph.
 
@@ -147,9 +152,11 @@ def run_generic(step, state, T: int, key: jax.Array, record_every: int = 0,
                              eval_fn=eval_fn, x_of=x_of, donate=False)
 
 
-def run_generic_loop(step, state, T: int, key: jax.Array,
-                     record_every: int = 0, eval_fn=None,
-                     x_of=lambda s: s.x):
+def run_generic_loop(step: Callable[[Any, jax.Array], Any], state: Any,
+                     T: int, key: jax.Array, record_every: int = 0,
+                     eval_fn: Optional[Callable[[jax.Array], jax.Array]] = None,
+                     x_of: Callable[[Any], jax.Array] = lambda s: s.x
+                     ) -> Tuple[Any, list]:
     """Legacy per-step Python loop (ground truth for tests/test_engine.py)."""
     step = jax.jit(step)
     trace = []

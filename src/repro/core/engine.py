@@ -48,7 +48,8 @@ class Trace:
 
     __slots__ = ("t", "bits", "loss", "sync_rounds", "triggers")
 
-    def __init__(self, t, bits, loss, sync_rounds, triggers):
+    def __init__(self, t: Any, bits: Any, loss: Any, sync_rounds: Any,
+                 triggers: Any) -> None:
         self.t = np.asarray(t, np.int64)
         self.bits = np.asarray(bits, np.float64)
         self.loss = np.asarray(loss, np.float64)
@@ -80,8 +81,39 @@ class Trace:
                 "triggers": self.triggers.tolist()}
 
 
-def _default_x_of(state):
+def _default_x_of(state: Any) -> jax.Array:
     return state.x
+
+
+class Runner:
+    """Callable ``(state, key) -> (final_state, Trace)`` with AOT hooks.
+
+    ``warmup`` compiles for the argument shapes without executing; ``lower``
+    and ``compiled``/``trace_count`` expose the static-audit surface
+    (repro.analysis reads the AOT artifact and the retrace counter).
+    """
+
+    __slots__ = ("_call", "_warmup", "lower", "compiled", "trace_count",
+                 "donate")
+
+    def __init__(self, call: Callable[[Any, jax.Array], Tuple[Any, "Trace"]],
+                 warmup: Callable[[Any, jax.Array], None],
+                 lower: Callable[..., Any],
+                 compiled: Callable[[], Any],
+                 trace_count: Callable[[], int],
+                 donate: bool) -> None:
+        self._call = call
+        self._warmup = warmup
+        self.lower = lower
+        self.compiled = compiled
+        self.trace_count = trace_count
+        self.donate = donate
+
+    def __call__(self, state: Any, key: jax.Array) -> Tuple[Any, "Trace"]:
+        return self._call(state, key)
+
+    def warmup(self, state: Any, key: jax.Array) -> None:
+        self._warmup(state, key)
 
 
 def _mean_model(x: jax.Array) -> jax.Array:
@@ -93,7 +125,7 @@ def make_runner(step_fn: Callable[[Any, jax.Array], Any], T: int, *,
                 record_every: int = 0,
                 eval_fn: Optional[Callable[[jax.Array], jax.Array]] = None,
                 x_of: Callable[[Any], jax.Array] = _default_x_of,
-                donate: bool = True):
+                donate: bool = True) -> Runner:
     """Build ``runner(state, key) -> (final_state, Trace)``.
 
     One XLA program for the whole T-step trajectory; compile on first call,
@@ -148,26 +180,24 @@ def make_runner(step_fn: Callable[[Any, jax.Array], Any], T: int, *,
         if compiled is None:
             compiled = jitted.lower(state, key).compile()
 
-    def runner(state, key):
+    def call(state: Any, key: jax.Array) -> Tuple[Any, Trace]:
         final, recs = (compiled or jitted)(state, key)
         if recs is None:
             return final, Trace.empty()
         return final, Trace(*jax.device_get(recs))
 
-    runner.warmup = warmup
     # static-audit hooks (repro.analysis): lower without executing, read the
     # AOT-compiled artifact, and count traces (exactly 1 per shape is the
     # retrace-gate contract — see analysis/jaxpr_lint.audit_retrace)
-    runner.lower = jitted.lower
-    runner.compiled = lambda: compiled
-    runner.trace_count = lambda: trace_count[0]
-    runner.donate = donate
-    return runner
+    return Runner(call, warmup, jitted.lower, lambda: compiled,
+                  lambda: trace_count[0], donate)
 
 
-def run_traced(step_fn, state, T: int, key: jax.Array, record_every: int = 0,
-               eval_fn=None, x_of: Callable[[Any], jax.Array] = _default_x_of,
-               donate: bool = True):
+def run_traced(step_fn: Callable[[Any, jax.Array], Any], state: Any, T: int,
+               key: jax.Array, record_every: int = 0,
+               eval_fn: Optional[Callable[[jax.Array], jax.Array]] = None,
+               x_of: Callable[[Any], jax.Array] = _default_x_of,
+               donate: bool = True) -> Tuple[Any, Trace]:
     """One-shot convenience around :func:`make_runner`.
 
     Returns ``(final_state, Trace)``; the trace is empty unless both
@@ -178,7 +208,9 @@ def run_traced(step_fn, state, T: int, key: jax.Array, record_every: int = 0,
     return runner(state, key)
 
 
-def timed_run(runner, make_state: Callable[[], Any], key: jax.Array, T: int):
+def timed_run(runner: Callable[[Any, jax.Array], Tuple[Any, Trace]],
+              make_state: Callable[[], Any], key: jax.Array,
+              T: int) -> Tuple[Any, Trace, float]:
     """Benchmark-fidelity timing: AOT-compile the runner first, then time one
     run end to end.
 

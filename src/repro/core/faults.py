@@ -57,7 +57,7 @@ is deferred rather than lost.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -197,7 +197,8 @@ class FaultPlan:
         deg_eff = jnp.sum(off > 0, axis=1).astype(jnp.float32)
         return W_eff, deg_eff, live
 
-    def gate_update(self, active: jax.Array, new_tree, old_tree):
+    def gate_update(self, active: jax.Array, new_tree: Any,
+                    old_tree: Any) -> Any:
         """Freeze skipped nodes: ``new`` where the node stepped, ``old``
         elsewhere, per node-stacked leaf. Leaves without a leading node axis
         (e.g. a shared step counter in an optimizer state) pass through
@@ -213,7 +214,7 @@ class FaultPlan:
         return jax.tree.map(gate, new_tree, old_tree)
 
 
-def resolve_faults(faults) -> "FaultPlan | None":
+def resolve_faults(faults: "FaultPlan | None") -> "FaultPlan | None":
     """``None`` for no-fault configs (including an explicitly null plan), so
     engine code can guard the whole fault path with a static Python check and
     keep the fault-free lowering byte-identical to the pre-fault program."""

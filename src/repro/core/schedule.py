@@ -22,7 +22,7 @@ def periodic_sync_mask(T: int, H: int) -> jnp.ndarray:
     return (t % H) == 0
 
 
-def is_sync(t, H: int):
+def is_sync(t: jax.Array, H: int) -> jax.Array:
     """(t+1) in I_T for periodic I_T with gap H (works under jit)."""
     return ((t + 1) % H) == 0
 

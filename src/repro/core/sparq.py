@@ -166,7 +166,8 @@ def init_state(x0: jax.Array, n: int,
                       triggers=jnp.int32(0))
 
 
-def make_step(cfg: SparqConfig, grad_fn: GradFn):
+def make_step(cfg: SparqConfig, grad_fn: GradFn
+              ) -> Callable[[SparqState, jax.Array], SparqState]:
     """Returns jit-able step(state, key) -> state implementing Algorithm 1
     (or SQuARM-SGD when the config's optimizer carries momentum).
 
@@ -255,7 +256,8 @@ def make_step(cfg: SparqConfig, grad_fn: GradFn):
 
 def run(cfg: SparqConfig, grad_fn: GradFn, x0: jax.Array, T: int,
         key: jax.Array, record_every: int = 0,
-        eval_fn: Optional[Callable[[jax.Array], jax.Array]] = None):
+        eval_fn: Optional[Callable[[jax.Array], jax.Array]] = None
+        ) -> "tuple[SparqState, engine.Trace]":
     """Run T steps inside one chunked-scan XLA program (core/engine.py).
 
     Returns (final_state, trace) where trace records
@@ -272,7 +274,8 @@ def run(cfg: SparqConfig, grad_fn: GradFn, x0: jax.Array, T: int,
 
 def run_loop(cfg: SparqConfig, grad_fn: GradFn, x0: jax.Array, T: int,
              key: jax.Array, record_every: int = 0,
-             eval_fn: Optional[Callable[[jax.Array], jax.Array]] = None):
+             eval_fn: Optional[Callable[[jax.Array], jax.Array]] = None
+             ) -> "tuple[SparqState, list]":
     """Legacy per-step Python loop — one jitted dispatch + host sync per
     record point. Kept as the ground-truth driver the chunked-scan engine is
     pinned against (tests/test_engine.py); use `run` everywhere else."""
@@ -290,7 +293,7 @@ def run_loop(cfg: SparqConfig, grad_fn: GradFn, x0: jax.Array, T: int,
 
 
 def run_scan(cfg: SparqConfig, grad_fn: GradFn, x0: jax.Array, T: int,
-             key: jax.Array):
+             key: jax.Array) -> SparqState:
     """Scan the whole trajectory with no trace (engine with record_every=0)."""
     step = make_step(cfg, grad_fn)
     state = init_state(x0, cfg.n, cfg.resolved_optimizer())

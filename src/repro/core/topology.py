@@ -59,7 +59,8 @@ def complete_adjacency(n: int) -> np.ndarray:
     return np.ones((n, n)) - np.eye(n)
 
 
-def _try_regular(n: int, deg: int, rng) -> Optional[np.ndarray]:
+def _try_regular(n: int, deg: int,
+                 rng: np.random.Generator) -> Optional[np.ndarray]:
     """One rejection-sampling attempt at a deg-regular simple graph:
     deg//2 random Hamiltonian cycles (cyclic 2-factors) plus, for odd deg,
     one random perfect matching. A cycle is built from a random node order,
@@ -77,7 +78,7 @@ def _try_regular(n: int, deg: int, rng) -> Optional[np.ndarray]:
             a[u, v] = a[v, u] = 1
     if deg % 2 == 1:
         order = rng.permutation(n)
-        for i, j in zip(order[0::2], order[1::2]):
+        for i, j in zip(order[0::2], order[1::2], strict=False):
             if a[i, j]:
                 return None
             a[i, j] = a[j, i] = 1
@@ -356,7 +357,7 @@ class GossipPlan:
         for _ in range(rounds):
             order = rng.permutation(n)
             w = np.eye(n)
-            for i, j in zip(order[0::2], order[1::2]):
+            for i, j in zip(order[0::2], order[1::2], strict=False):
                 w[i, i] = w[j, j] = 0.5
                 w[i, j] = w[j, i] = 0.5
             ws.append(w)

@@ -72,7 +72,8 @@ def piecewise(c0: float, step: float, every: int, until: int) -> ThresholdSchedu
     return ThresholdSchedule(fn, f"piecewise(c0={c0},+{step}/{every}<= {until})")
 
 
-def should_trigger(x_half, x_hat, c_t, eta_t):
+def should_trigger(x_half: jax.Array, x_hat: jax.Array, c_t: jax.Array,
+                   eta_t: jax.Array) -> jax.Array:
     """Squared-norm trigger over a flat vector: returns bool scalar."""
     diff = x_half - x_hat
     return jnp.sum(diff * diff) > c_t * eta_t * eta_t

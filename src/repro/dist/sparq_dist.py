@@ -154,12 +154,14 @@ class DistSparqConfig:
             return float(self.gamma)
         # defer to the operator's own omega at the true model dimension
         # (TopFrac.omega: k/d with k = ceil(frac*d) — frac in the d->inf
-        # limit), exactly what the reference engine's gamma* resolution uses
+        # limit, capped at the 2/pi full-sign isotropic retention), exactly
+        # what the reference engine's gamma* resolution uses
         comp = self.resolved_compressor()
         if d:
             om = comp.omega(d)
         elif self.compressor is None:
-            om = min(self.frac, 1.0)    # TopFrac's omega in the d->inf limit
+            # TopFrac's omega in the d->inf limit, same 2/pi cap as omega()
+            om = min(self.frac, 2.0 / math.pi)
         else:
             raise ValueError(
                 "resolved_gamma() needs the model dimension d when gamma is "
@@ -172,7 +174,8 @@ def _node_sq_dist(x_half, x_hat):
     """Per-node squared distance summed over every leaf -> (n,) f32."""
     parts = [jnp.sum((a.astype(jnp.float32) - b.astype(jnp.float32)) ** 2,
                      axis=tuple(range(1, a.ndim)))
-             for a, b in zip(jax.tree.leaves(x_half), jax.tree.leaves(x_hat))]
+             for a, b in zip(jax.tree.leaves(x_half), jax.tree.leaves(x_hat),
+                            strict=True)]
     return sum(parts)
 
 
@@ -281,7 +284,8 @@ def build_sparq(cfg, mesh, dcfg: DistSparqConfig
     opt_specs = opt_treedef.unflatten([
         jax.sharding.PartitionSpec("node", *base)
         if stk.shape == (n,) + uns.shape else scalar
-        for uns, stk, base in zip(opt_unstacked, opt_stacked, opt_base)])
+        for uns, stk, base in zip(opt_unstacked, opt_stacked, opt_base,
+                                  strict=True)])
     state_specs: State = {
         "params": pspec, "x_hat": pspec, "opt": opt_specs,
         "t": scalar, "bits": scalar, "bits_c": scalar,
@@ -432,4 +436,10 @@ def build_sparq(cfg, mesh, dcfg: DistSparqConfig
     # without re-resolving (sampled plans are seed-deterministic, but the
     # engine's own object is the source of truth)
     init_fn.plan = train_step.plan = plan
+    # communication-model metadata the static bit-accounting oracle
+    # (repro.analysis R10/R11) cross-checks: the per-node-per-sync payload
+    # this engine charges and the true model dimension behind gamma*
+    init_fn.payload_bits = train_step.payload_bits = float(payload)
+    init_fn.d_model_total = train_step.d_model_total = int(d_model_total)
+    init_fn.gamma = train_step.gamma = float(gamma)
     return init_fn, train_step, state_specs, pshape

@@ -183,6 +183,14 @@ def dryrun_train(cfg: ModelConfig, shape: InputShape, prod_mesh,
             use_kernel=train_step.use_kernel,
             interpret=train_step.interpret,
             program=f"dryrun_train[{cfg.arch_id}]")
+        # theory-contract leg (R6-R9 + R11) over the same config and module
+        from repro.analysis.contracts import run_contract_lint
+        contract = run_contract_lint(
+            dcfg, d=train_step.d_model_total, n=train_step.n_nodes,
+            hlo=compiled.as_text(), mesh_axes=list(mesh.shape.items()),
+            program=f"dryrun_train[{cfg.arch_id}]")
+        res["lint"]["errors"] += contract["errors"]
+        res["lint"]["findings"] += contract["findings"]
     return res
 
 

@@ -256,7 +256,7 @@ def parse_module(hlo: str) -> Tuple[Dict[str, Comp], Optional[str]]:
             if re.search(r"\bdot\(", rhs):
                 out_shapes = _parse_shapes(result_type(rhs))
                 out_elems = 0
-                for dt, dims in out_shapes:
+                for _dt, dims in out_shapes:
                     n = 1
                     for d in dims:
                         n *= d
@@ -477,6 +477,106 @@ def computation_bodies(hlo: str) -> Dict[str, List[str]]:
             continue
         cur_lines.append(st)
     return bodies
+
+
+# --------------------------------------------------------- collective views
+#
+# Per-op views of the module's communication instructions, for the
+# uncharged-collective lint (repro.analysis R11). XLA prints device groups in
+# two syntaxes:
+#
+# * literal:   replica_groups={{0,1},{2,3},...}
+# * iota form: replica_groups=[G,S]<=[d0,d1,...]T(p0,p1,...) — reshape
+#   iota(prod(dims)) to ``dims``, transpose by ``perm`` (identity when the
+#   T(...) suffix is absent), flatten, then split into G groups of S.
+#
+# collective-permute carries source_target_pairs={{s,t},...} instead.
+
+_RG_LITERAL_RE = re.compile(r"replica_groups=\{(\{[0-9, ]*\}(?:,\{[0-9, ]*\})*)\}")
+_RG_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+_STP_RE = re.compile(r"source_target_pairs=\{(\{[0-9, ]*\}(?:,\{[0-9, ]*\})*)\}")
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _iota_groups(g: int, s: int, dims: List[int], perm: List[int]
+                 ) -> List[List[int]]:
+    n = 1
+    for d in dims:
+        n *= d
+    # row-major strides of the dims shape, walked in transposed order
+    strides = [1] * len(dims)
+    for i in range(len(dims) - 2, -1, -1):
+        strides[i] = strides[i + 1] * dims[i + 1]
+    flat: List[int] = []
+
+    def walk(depth: int, base: int) -> None:
+        if depth == len(perm):
+            flat.append(base)
+            return
+        ax = perm[depth]
+        for i in range(dims[ax]):
+            walk(depth + 1, base + i * strides[ax])
+
+    walk(0, 0)
+    assert len(flat) == n == g * s
+    return [flat[i * s:(i + 1) * s] for i in range(g)]
+
+
+def parse_replica_groups(line: str) -> Optional[List[List[int]]]:
+    """Device groups of one collective instruction line, or None."""
+    m = _RG_LITERAL_RE.search(line)
+    if m:
+        return [[int(x) for x in grp.split(",") if x.strip()]
+                for grp in re.findall(r"\{([0-9, ]*)\}", m.group(1))]
+    m = _RG_IOTA_RE.search(line)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",") if x]
+        perm = ([int(x) for x in m.group(4).split(",") if x]
+                if m.group(4) else list(range(len(dims))))
+        return _iota_groups(g, s, dims, perm)
+    return None
+
+
+def parse_source_target_pairs(line: str) -> Optional[List[Tuple[int, int]]]:
+    """(source, target) device pairs of a collective-permute line, or None."""
+    m = _STP_RE.search(line)
+    if m is None:
+        return None
+    return [(int(a), int(b))
+            for a, b in re.findall(r"\{\s*(\d+)\s*,\s*(\d+)\s*\}", m.group(1))]
+
+
+def collective_ops(hlo: str) -> List[Dict[str, object]]:
+    """Every communication instruction in the module, one record per op:
+
+    ``{"computation", "kind", "result_bytes", "groups", "pairs", "op_name",
+    "while_reachable"}`` — ``groups``/``pairs`` resolved through both
+    replica-group syntaxes, ``op_name`` from the op's metadata (empty when
+    absent), ``while_reachable`` whether the op sits in (or is reachable
+    from) a scanned while body. ``-done`` halves of async pairs are skipped
+    so each transfer counts once."""
+    reach = while_reachable(hlo)
+    out: List[Dict[str, object]] = []
+    for name, lines in computation_bodies(hlo).items():
+        for s in lines:
+            dm = _DEF_RE.match(s)
+            rhs = dm.group(2) if dm else s
+            cm = _COLL_RE.search(rhs)
+            if not cm or cm.group(2) == "-done":
+                continue
+            om = _OPNAME_RE.search(s)
+            out.append({
+                "computation": name,
+                "kind": cm.group(1),
+                "result_bytes": _result_bytes(rhs[:cm.start()]),
+                "groups": parse_replica_groups(s),
+                "pairs": parse_source_target_pairs(s),
+                "op_name": om.group(1) if om else "",
+                "while_reachable": name in reach,
+            })
+    return out
 
 
 def while_reachable(hlo: str) -> set:

@@ -83,7 +83,9 @@ def _parse():
     ap.add_argument("--lint", action="store_true",
                     help="static-audit the compiled step (repro.analysis "
                          "R1/R4/R5: donation, hidden transfers, interpret "
-                         "leak) before training; lint errors abort the run")
+                         "leak; R6-R9: theory contracts; R11: uncharged "
+                         "collectives) before training; lint errors abort "
+                         "the run")
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -146,14 +148,14 @@ def main():
         # invalid window (DropoutWindow validates start < end)
         raise SystemExit(
             f"[train] --dropout-window needs integer NODE:START:END with "
-            f"START < END, got {args.dropout_window!r}")
+            f"START < END, got {args.dropout_window!r}") from None
     try:
         straggler_ids = tuple(
             int(i) for i in args.stragglers.split(",") if i)
     except ValueError:
         raise SystemExit(
             f"[train] --stragglers needs comma-separated integer node "
-            f"indices, got {args.stragglers!r}")
+            f"indices, got {args.stragglers!r}") from None
     faults = FaultPlan(
         link_drop=args.link_drop,
         stragglers=straggler_ids,
@@ -222,6 +224,7 @@ def main():
         # audit THIS jitted step: .lower() shares the trace cache with the
         # training loop's calls, so the audit adds one AOT compile but no
         # extra trace (the repro.analysis retrace gate relies on the same)
+        from repro.analysis.contracts import run_contract_lint
         from repro.analysis.hlo_lint import run_lint
         state_sds = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
@@ -233,11 +236,19 @@ def main():
             use_kernel=train_step.use_kernel,
             interpret=train_step.interpret,
             program=f"train[{cfg.arch_id}]")
-        if lint["errors"]:
+        # theory-contract leg (R6-R9) on the exact config being launched,
+        # plus the uncharged-collective walk (R11) over the same module
+        contract = run_contract_lint(
+            dcfg, d=train_step.d_model_total, n=train_step.n_nodes,
+            hlo=hlo, mesh_axes=list(mesh.shape.items()),
+            program=f"train[{cfg.arch_id}]")
+        n_errors = lint["errors"] + contract["errors"]
+        if n_errors:
             raise SystemExit(
-                f"[train] --lint: {lint['errors']} static-audit error(s) "
+                f"[train] --lint: {n_errors} static-audit error(s) "
                 f"in the compiled step (see findings above)")
-        print("[train] --lint: compiled step passes the static audit")
+        print("[train] --lint: compiled step passes the static audit "
+              "(lowering + theory contracts)")
 
     metrics = None
     t0 = time.time()

@@ -148,7 +148,7 @@ def forward_hidden(cfg: ModelConfig, params: Params,
     positions = jnp.arange(s, dtype=jnp.int32)
     aux_total = jnp.zeros((), jnp.float32)
 
-    for si, (kind, n) in enumerate(segments(cfg)):
+    for si, (kind, _n) in enumerate(segments(cfg)):
         seg_params = params[f"seg{si}"]
 
         if kind == "dense":
@@ -377,7 +377,7 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
         cc = cache[ckey]
         layer_off = 0
         outs = {k: [] for k in cc}
-        for si, (kind, n) in enumerate(segments(cfg)):
+        for si, (_kind, n) in enumerate(segments(cfg)):
             seg_params = params[f"seg{si}"]
             sl = {k: v[layer_off:layer_off + n] for k, v in cc.items()}
 
@@ -388,7 +388,7 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
                     names = ("ckv", "kr", "pos")
                 else:
                     names = ("k", "v", "pos")
-                return h, dict(zip(names, new_kv))
+                return h, dict(zip(names, new_kv, strict=True))
 
             x, seg_new = jax.lax.scan(body, x, (seg_params, sl))
             for k in outs:

@@ -76,7 +76,8 @@ def test_smoke_train_step(arch_id):
     assert jnp.isfinite(loss)
     # params actually moved
     moved = any(bool(jnp.any(a != b))
-                for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+                for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2),
+                    strict=True))
     assert moved
     # second step decreases loss on the same batch (sanity of gradients)
     _, _, loss2 = step(p2, o2, batch)

@@ -59,8 +59,9 @@ def test_topfrac_k_and_bits_consistent(d, frac):
     assert k == max(1, math.ceil(frac * d))
     assert 1 <= k <= d
     assert c.bits(d) == bits_mod.signtopk_bits(d, k)
-    # omega is the k/d gamma* proxy at the true dimension, not SignTopK's 1/d
-    assert c.omega(d) == pytest.approx(k / d)
+    # omega is the k/d gamma* proxy at the true dimension (not SignTopK's
+    # 1/d), capped at the 2/pi full-sign isotropic retention limit
+    assert c.omega(d) == pytest.approx(min(k / d, 2 / math.pi))
     # support size == k on distinct-magnitude inputs
     x = jnp.linspace(1.0, 2.0, d)
     assert int(jnp.sum(c(x) != 0)) == k

@@ -1,0 +1,298 @@
+"""Theory-contract & communication lint (R6-R11): every rule must fire on a
+broken fixture and stay quiet on its clean twin, and the committed configs the
+CI job certifies must be error-free."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import comm_lint
+from repro.analysis.contracts import (Contract, committed_configs,
+                                      contract_status, lint_combination,
+                                      lint_contracts, lint_mixing,
+                                      lint_omega_gamma, lint_schedule,
+                                      run_contract_lint)
+from repro.analysis.rules import apply_suppressions
+from repro.core.compression import Identity, RandK, SignTopK, TopK
+from repro.core.faults import FaultPlan
+from repro.core.schedule import decaying, fixed
+from repro.core.sparq import SparqConfig, run_scan
+from repro.core.topology import GossipPlan, make_topology
+from repro.core.triggers import ThresholdSchedule, piecewise, zero
+
+RING8 = make_topology("ring", 8)
+
+
+def _contract(**kw):
+    base = dict(plan=GossipPlan.from_topology(RING8),
+                compressor=SignTopK(k=4), threshold=zero(), H=1,
+                gamma=1e-6, gamma_error="", faults=None, d=64)
+    base.update(kw)
+    return Contract(**base)
+
+
+def _ids(findings):
+    return [f.rule_id for f in findings]
+
+
+# --------------------------------------------------------------------- R6
+
+def test_r6_substochastic_round_fires():
+    bad = RING8.w.copy()
+    bad[0, 0] -= 0.2  # breaks row-stochasticity of row 0
+    con = _contract(plan=GossipPlan(ws=bad[None], name="broken"))
+    out = lint_mixing(con, program="t")
+    assert out and all(f.rule_id == "R6" for f in out)
+    assert all(f.severity == "error" for f in out)
+
+
+def test_r6_disconnected_in_expectation_fires():
+    con = _contract(plan=GossipPlan(ws=np.eye(8)[None], name="isolated"))
+    out = lint_mixing(con, program="t")
+    assert any("disconnected in expectation" in f.message for f in out)
+
+
+def test_r6_clean_ring_and_faulty_repair():
+    assert lint_mixing(_contract(), program="t") == []
+    # the repair rule keeps every fault-drawn round doubly stochastic
+    faulty = _contract(faults=FaultPlan(link_drop=0.4, seed=3))
+    assert lint_mixing(faulty, program="t") == []
+
+
+# --------------------------------------------------------------------- R7
+
+class _LyingTopK(TopK):
+    """Claims near-lossless contraction while keeping k coordinates."""
+
+    def omega(self, d: int) -> float:
+        return 0.9
+
+
+def test_r7_refuted_omega_certificate_fires():
+    con = _contract(compressor=_LyingTopK(k=1))
+    out, cert = lint_omega_gamma(con, program="t")
+    assert cert.refuted
+    assert any(f.rule_id == "R7" and f.severity == "error"
+               and "REFUTED" in f.message for f in out)
+
+
+def test_r7_gamma_above_lemma6_bound_warns_not_errors():
+    con = _contract(gamma=0.9)
+    out, _cert = lint_omega_gamma(con, program="t")
+    assert [f.severity for f in out if f.rule_id == "R7"] == ["warning"]
+    assert any("Lemma-6" in f.message or "gamma*" in f.message for f in out)
+
+
+def test_r7_gamma_outside_unit_interval_errors():
+    out, _ = lint_omega_gamma(_contract(gamma=1.5), program="t")
+    assert any(f.severity == "error" and "outside (0, 1]" in f.message
+               for f in out)
+
+
+def test_r7_gamma_resolution_failure_errors():
+    out, _ = lint_omega_gamma(
+        _contract(gamma=None, gamma_error="no gamma* for omega=0"),
+        program="t")
+    assert any(f.severity == "error" and "resolution failed" in f.message
+               for f in out)
+
+
+def test_r7_clean_below_bound():
+    out, cert = lint_omega_gamma(_contract(gamma=1e-6), program="t")
+    assert out == [] and not cert.refuted
+
+
+# --------------------------------------------------------------------- R8
+
+def test_r8_linear_threshold_violates_o_of_t():
+    con = _contract(threshold=ThresholdSchedule(lambda t: 1.0 * t, "linear"))
+    out = lint_schedule(con, program="t")
+    assert any(f.rule_id == "R8" and f.severity == "error"
+               and "o(t)" in f.message for f in out)
+
+
+def test_r8_negative_threshold_fires():
+    con = _contract(threshold=ThresholdSchedule(lambda t: -1.0 + 0.0 * t,
+                                                "neg"))
+    out = lint_schedule(con, program="t")
+    assert any("negative" in f.message for f in out)
+
+
+def test_r8_nonpositive_sync_gap_fires():
+    out = lint_schedule(_contract(H=0), program="t")
+    assert any("H = 0" in f.message and f.severity == "error" for f in out)
+
+
+def test_r8_zero_threshold_is_an_informational_reduction():
+    choco = lint_schedule(_contract(threshold=zero(), H=1), program="t")
+    assert [f.severity for f in choco] == ["info"]
+    assert "CHOCO" in choco[0].message
+    qsparse = lint_schedule(_contract(threshold=zero(), H=4), program="t")
+    assert "Qsparse" in qsparse[0].message
+
+
+def test_r8_bounded_piecewise_clean():
+    con = _contract(threshold=piecewise(2.0, 1.0, every=64, until=512))
+    assert lint_schedule(con, program="t") == []
+
+
+# --------------------------------------------------------------------- R9
+
+def test_r9_combination_rules_fire():
+    faults = FaultPlan(link_drop=0.2, seed=1)
+    assert "R9" in _ids(lint_combination(
+        _contract(variant="ring", faults=faults), program="t"))
+    assert "R9" in _ids(lint_combination(
+        _contract(use_kernel=True, faults=faults), program="t"))
+    assert "R9" in _ids(lint_combination(
+        _contract(compressor=RandK(k=4), seed=0), program="t"))
+    assert "R9" in _ids(lint_combination(
+        _contract(faults=FaultPlan(stragglers=(0,), straggler_frac=1.0,
+                                   seed=1)), program="t"))
+    vanilla = lint_combination(
+        _contract(compressor=Identity(), threshold=zero()), program="t")
+    assert vanilla and all(f.severity == "info" for f in vanilla)
+
+
+def test_r9_clean_combination():
+    assert lint_combination(_contract(), program="t") == []
+
+
+# -------------------------------------------------------------------- R10
+
+def test_r10_bits_oracle_matches_reference_engine_exactly():
+    out, meta = comm_lint.lint_bits_oracle(program="t")
+    assert out == []
+    for name in ("clean", "faulty"):
+        fx = meta["fixtures"][name]
+        assert fx["trace"]["bits"] == fx["oracle"]["bits"]
+        assert fx["trace"]["triggers"] == fx["oracle"]["triggers"]
+    assert meta["payload_checks"] == 24
+
+
+def test_r10_dist_payload_drift_fires():
+    pshape = {"w": jax.ShapeDtypeStruct((32,), jnp.float32),
+              "b": jax.ShapeDtypeStruct((8,), jnp.float32)}
+    comp = SignTopK(k=10)
+    want = sum(comm_lint.derive_payload_bits(comp, d) for d in (32, 8))
+    assert comm_lint.lint_dist_payload(comp, pshape, want, program="t") == []
+    out = comm_lint.lint_dist_payload(comp, pshape, want + 17.0, program="t")
+    assert _ids(out) == ["R10"] and "drift" in out[0].message
+
+
+def test_r10_bits_interval_brackets_a_real_trace():
+    d = 128
+    cfg = SparqConfig(topology=RING8, compressor=SignTopK(k=6),
+                      threshold=zero(), lr=fixed(0.05), H=2)
+    x0 = jnp.asarray(np.arange(8 * d, dtype=np.float32).reshape(8, d)
+                     / (8 * d) + 0.1)
+    st = run_scan(cfg, lambda x, t, key: jnp.ones_like(x), x0, 8,
+                  jax.random.PRNGKey(0))
+    lo, hi = comm_lint.bits_interval(cfg.resolved_plan(), None, cfg.H,
+                                     float(cfg.compressor.bits(d)),
+                                     int(st.sync_rounds), int(st.triggers))
+    assert lo <= float(st.bits) <= hi
+    assert lo == hi  # uniform static fault-free plan: interval is a point
+
+
+# -------------------------------------------------------------------- R11
+
+# mesh (node=4, fsdp=1, model=2): groups {0,2,4,6}/{1,3,5,7} vary the node
+# axis only, pairs within {0,1} vary the model axis only
+_MESH_AXES = [("node", 4), ("fsdp", 1), ("model", 2)]
+_SYN_HLO = """HloModule synthetic
+
+ENTRY %main (p0: f32[8,1024]) -> f32[8,1024] {
+  %p0 = f32[8,1024]{1,0} parameter(0)
+  %a2a = f32[8,1024]{1,0} all-to-all(%p0), replica_groups={{0,2,4,6},{1,3,5,7}}, metadata={op_name="jit(step)/shuffle"}
+  %gather = f32[8,1024]{1,0} all-gather(%p0), replica_groups={{0,2,4,6},{1,3,5,7}}, dimensions={0}
+  %loss = f32[] all-reduce(%p0), replica_groups={{0,2,4,6},{1,3,5,7}}, to_apply=%add
+  %sim = f32[8,1024]{1,0} all-to-all(%p0), replica_groups={{0,2,4,6},{1,3,5,7}}, metadata={op_name="jit(step)/sign_topk_sim"}
+  %inner = f32[8,1024]{1,0} all-gather(%p0), replica_groups={{0,1},{2,3},{4,5},{6,7}}, dimensions={0}
+  ROOT %out = f32[8,1024]{1,0} add(%a2a, %gather)
+}
+"""
+
+
+def test_r11_uncharged_node_collective_fires_once():
+    out, meta = comm_lint.lint_collectives(
+        _SYN_HLO, _MESH_AXES, n_nodes=4, d_model_total=1024, program="t")
+    assert _ids(out) == ["R11"] and "all-to-all" in out[0].message
+    assert meta["node_gossip_bytes"] == 32768.0      # the node all-gather
+    assert meta["node_metrics_bytes"] == 4.0         # the scalar all-reduce
+    assert meta["internal_bytes"] == 32768.0         # the model-axis gather
+    assert meta["interpret_sim_bytes"] == 32768.0    # sign_topk sim excluded
+    assert meta["unexplained_bytes"] == 32768.0      # only the all-to-all
+
+
+def test_r11_gossip_budget_overrun_fires():
+    out, meta = comm_lint.lint_collectives(
+        _SYN_HLO, _MESH_AXES, n_nodes=4, d_model_total=16, program="t")
+    assert any("exceeds the x_hat exchange budget" in f.message for f in out)
+    assert meta["unexplained_bytes"] > 32768.0
+
+
+def test_r11_without_node_axis_is_a_note():
+    out, meta = comm_lint.lint_collectives(
+        _SYN_HLO, [("fsdp", 4), ("model", 2)], n_nodes=4,
+        d_model_total=1024, program="t")
+    assert out == [] and "note" in meta
+
+
+# ------------------------------------------------- assembly & suppressions
+
+def test_lint_contracts_collects_across_rules():
+    cfg = SparqConfig(topology=RING8, compressor=SignTopK(k=4),
+                      threshold=ThresholdSchedule(lambda t: 2.0 * t, "lin"),
+                      lr=decaying(1.0, 100.0), H=5)
+    findings, meta = lint_contracts(cfg, 64, program="t")
+    assert "R8" in _ids(findings)
+    assert meta["d"] == 64 and meta["plan"] == RING8.name
+    assert meta["omega_certificate"] is not None
+
+
+def test_contract_status_ok_and_bits_mismatch():
+    d = 128
+    cfg = SparqConfig(topology=RING8, compressor=SignTopK(k=6),
+                      threshold=zero(), lr=fixed(0.05), H=2)
+    x0 = jnp.asarray(np.arange(8 * d, dtype=np.float32).reshape(8, d)
+                     / (8 * d) + 0.1)
+    st = run_scan(cfg, lambda x, t, key: jnp.ones_like(x), x0, 8,
+                  jax.random.PRNGKey(0))
+    row = contract_status(cfg, d, bits=float(st.bits),
+                          sync_rounds=int(st.sync_rounds),
+                          trigger_events=int(st.triggers))
+    assert row["contract_status"] == "ok"
+    assert row["bits_oracle"]["lo"] <= row["bits_oracle"]["bits"]
+    bad = contract_status(cfg, d, bits=float(st.bits) * 3.0,
+                          sync_rounds=int(st.sync_rounds),
+                          trigger_events=int(st.triggers))
+    assert bad["contract_status"] == "bits-mismatch"
+
+
+def test_committed_configs_certify_error_free():
+    for name, cfg, d in committed_configs():
+        findings, _meta = lint_contracts(cfg, d, program=name)
+        errs = [f for f in findings if f.severity == "error"]
+        assert errs == [], (name, [f.message for f in errs])
+
+
+def test_run_contract_lint_counts_unsuppressed_errors(capsys):
+    cfg = SparqConfig(topology=RING8, compressor=SignTopK(k=4),
+                      threshold=zero(), lr=fixed(0.05), H=2)
+    res = run_contract_lint(cfg, d=1024, n=4, hlo=_SYN_HLO,
+                            mesh_axes=_MESH_AXES, program="t")
+    assert res["errors"] == 1  # the synthetic uncharged all-to-all
+    assert any(f["rule_id"] == "R11" for f in res["findings"])
+    assert "[lint R11/ERROR]" in capsys.readouterr().out
+
+
+def test_suppressions_cover_the_new_rules():
+    out, _ = comm_lint.lint_collectives(
+        _SYN_HLO, _MESH_AXES, n_nodes=4, d_model_total=1024, program="t")
+    blanket = apply_suppressions(out, {"R11": "accepted debug transfer"})
+    assert all(f.suppressed for f in blanket)
+    assert blanket[0].suppression_reason == "accepted debug transfer"
+    out2, _ = comm_lint.lint_collectives(
+        _SYN_HLO, _MESH_AXES, n_nodes=4, d_model_total=1024, program="t")
+    miss = apply_suppressions(out2, {"R11": {"match": "no-such-op"}})
+    assert not any(f.suppressed for f in miss)

@@ -227,7 +227,8 @@ def test_circulant_shift_lowering_matches_dense():
             state, _ = step(state, batch)
         out[variant] = state
     a, b = out["shift"], out["dense"]
-    for la, lb in zip(jax.tree.leaves(a["params"]), jax.tree.leaves(b["params"])):
+    for la, lb in zip(jax.tree.leaves(a["params"]),
+                      jax.tree.leaves(b["params"]), strict=True):
         np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=5e-3,
                                    rtol=0)
     assert int(a["triggers"]) == int(b["triggers"])

@@ -55,7 +55,7 @@ SCRIPT = textwrap.dedent("""
     p1 = jax.tree.leaves(s_dense["params"])
     p2 = jax.tree.leaves(s_ring["params"])
     out["dense_ring_max_diff"] = max(
-        float(jnp.max(jnp.abs(a - b))) for a, b in zip(p1, p2))
+        float(jnp.max(jnp.abs(a - b))) for a, b in zip(p1, p2, strict=True))
     out["loss_first"] = l_dense[0]
     out["loss_last"] = l_dense[-1]
     out["bits"] = float(m_dense["bits"])
@@ -85,14 +85,15 @@ SCRIPT = textwrap.dedent("""
     topo = make_topology("ring", 4)
     W = jnp.asarray(topo.w, jnp.float32)
     xhat_new = state2["x_hat"]
-    gamma = topo.gamma_star(1.0)
+    gamma = dcfg.resolved_gamma(topo)
     def consensus(xh, xe):
         mix = jnp.tensordot(W, xe, axes=1) - xe
         return xh + gamma * mix
     ref = jax.tree.map(consensus, x_half, xhat_new)
     err = max(float(jnp.max(jnp.abs(a - b)))
               for a, b in zip(jax.tree.leaves(ref),
-                              jax.tree.leaves(state2["params"])))
+                              jax.tree.leaves(state2["params"]),
+                              strict=True))
     out["consensus_algebra_err"] = err
 
     # Pallas-kernel compression path matches the jnp gossip path

@@ -35,7 +35,7 @@ def problem():
 
 def assert_traces_equal(tr_engine, tr_loop):
     assert len(tr_engine) == len(tr_loop) > 0
-    for e, l in zip(tr_engine, tr_loop):
+    for e, l in zip(tr_engine, tr_loop, strict=True):
         assert e[0] == l[0]                                   # t
         np.testing.assert_allclose(e[1], l[1], rtol=1e-6)     # bits
         np.testing.assert_allclose(e[2], l[2], rtol=1e-4,     # loss
@@ -111,7 +111,8 @@ def test_run_traced_matches_loop_squarm(problem):
     assert_traces_equal(tr_e, tr_l)
     np.testing.assert_allclose(np.array(st_e.x), np.array(st_l.x),
                                rtol=1e-5, atol=1e-6)
-    for a, b in zip(jax.tree.leaves(st_e.opt), jax.tree.leaves(st_l.opt)):
+    for a, b in zip(jax.tree.leaves(st_e.opt), jax.tree.leaves(st_l.opt),
+                    strict=True):
         np.testing.assert_allclose(np.array(a), np.array(b),
                                    rtol=1e-5, atol=1e-6)
     assert float(st_e.bits) == pytest.approx(float(st_l.bits), rel=1e-6)

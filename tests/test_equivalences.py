@@ -8,8 +8,8 @@ import numpy as np
 
 from repro.configs.registry import get_config
 from repro.models import attention as attn
-from repro.models.transformer import chunked_ce, init_params, lm_loss
 from repro.models.layers import lm_logits
+from repro.models.transformer import chunked_ce, init_params, lm_loss
 
 
 def test_causal_parts_equals_full_attention():
@@ -97,7 +97,8 @@ def test_microbatch_grads_equal_full_batch():
 
     zero = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params)
     g_acc, _ = jax.lax.scan(acc, zero, bs)
-    for a, b_ in zip(jax.tree.leaves(g_full), jax.tree.leaves(g_acc)):
+    for a, b_ in zip(jax.tree.leaves(g_full), jax.tree.leaves(g_acc),
+                     strict=True):
         # bf16 activations are computed in different batch groupings ->
         # last-ulp differences on ~0.04-scale grads
         np.testing.assert_allclose(np.array(a, np.float32),

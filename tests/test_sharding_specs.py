@@ -12,7 +12,7 @@ def _amesh(sizes, names):
     try:
         return AbstractMesh(sizes, names)             # jax >= 0.5 API
     except TypeError:
-        return AbstractMesh(tuple(zip(names, sizes)))  # jax 0.4.x API
+        return AbstractMesh(tuple(zip(names, sizes, strict=True)))  # jax 0.4.x API
 
 
 MESH = _amesh((16, 16, 2), ("node", "fsdp", "model"))
@@ -36,11 +36,11 @@ def test_every_leaf_gets_a_divisible_spec(arch):
     flat_p = jax.tree.leaves(pshape)
     flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
     assert len(flat_p) == len(flat_s)
-    for leaf, spec in zip(flat_p, flat_s):
+    for leaf, spec in zip(flat_p, flat_s, strict=True):
         node_spec = P("node", *spec)   # what the train state uses
         full = tuple(node_spec) + (None,) * (
             1 + len(leaf.shape) - len(node_spec))
-        for dim, ax in zip((16,) + leaf.shape, full):
+        for dim, ax in zip((16,) + leaf.shape, full, strict=True):
             if ax is None:
                 continue
             for a in (ax if isinstance(ax, tuple) else (ax,)):

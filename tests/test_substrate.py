@@ -154,7 +154,8 @@ def test_checkpoint_roundtrip(tmp_path):
     assert ckpt.latest_step(d) == 42
     like = jax.tree.map(jnp.zeros_like, tree)
     restored = ckpt.restore(d, 42, like)
-    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored),
+                    strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 

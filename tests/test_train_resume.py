@@ -60,7 +60,7 @@ def test_full_state_checkpoint_roundtrip(tmp_path):
     flat_a = jax.tree_util.tree_leaves_with_path(state)
     flat_b = jax.tree_util.tree_leaves_with_path(restored)
     assert [p for p, _ in flat_a] == [p for p, _ in flat_b]
-    for (path, a), (_, b) in zip(flat_a, flat_b):
+    for (path, a), (_, b) in zip(flat_a, flat_b, strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
                                       err_msg=str(path))
     # the scalars the old params-only checkpoint silently reset
@@ -89,7 +89,7 @@ def test_resumed_trajectory_matches_unbroken_run(tmp_path):
         resumed, _ = step(resumed, batch)      # resumed steps 3-4
 
     for a, b in zip(jax.tree_util.tree_leaves(state),
-                    jax.tree_util.tree_leaves(resumed)):
+                    jax.tree_util.tree_leaves(resumed), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
