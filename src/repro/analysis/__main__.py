@@ -9,6 +9,12 @@ and optimized HLO. Nothing heavy executes: the HLO rules read AOT-compiled
 artifacts, and only the retrace gate (R3) runs the programs (twice, on
 reduced shapes, by design — that is what it measures).
 
+``--source`` adds the third leg: the S1-S6 source audit
+(`source_lint.py` over the `callgraph.py` traced-reachability graph),
+which lints the whole tree rather than the programs this CLI happens to
+lower, with grandfathered findings suppressed through the committed
+``results/SOURCE_BASELINE.json`` (``--baseline`` / ``--regen-baseline``).
+
 Exit status 0 iff zero unsuppressed errors; findings land in
 ``results/ANALYSIS.json`` (``--out``) for review-time diffing.
 """
@@ -211,6 +217,30 @@ def audit_dist(variant: str, arch: str, use_kernel: bool,
     return report
 
 
+def audit_source(baseline_path, regen: bool):
+    """S1-S6 leg: whole-tree source lint over the traced-reachability call
+    graph. Returns ``(report, source_meta)`` — the meta block (call-graph
+    census + baseline accounting) rides into ANALYSIS.json as the
+    top-level ``source`` key."""
+    from repro.analysis import source_lint
+
+    # relative root: the committed report must not embed machine paths
+    root = "."
+    if regen:
+        # Grandfather the CURRENT error findings (curated reasons in the
+        # existing file survive), then re-audit against the fresh baseline
+        # so the emitted report reflects what CI will see.
+        bare = source_lint.audit_repo(root)
+        doc = source_lint.write_baseline(bare, baseline_path)
+        print(f"[analysis] wrote {baseline_path} "
+              f"({len(doc['entries'])} entr{'y' if len(doc['entries']) == 1 else 'ies'})",
+              flush=True)
+    audit = source_lint.audit_repo(root, baseline_path=baseline_path)
+    report = Report(program="source", meta=dict(audit.meta))
+    report.extend(audit.report_findings())
+    return report, audit.meta
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
@@ -220,7 +250,10 @@ def main(argv=None) -> int:
                          "expander (core); ring maps to the ring variant, "
                          "anything else to dense, for dist")
     ap.add_argument("--engine", default="both",
-                    choices=["core", "dist", "both"])
+                    choices=["core", "dist", "both", "none"],
+                    help="which lowered programs to audit; 'none' skips "
+                         "the lowering legs entirely (only useful with "
+                         "--source and/or --contracts)")
     ap.add_argument("--arch", default="qwen1.5-0.5b",
                     help="dist model arch (reduced variant is audited)")
     ap.add_argument("--steps", type=int, default=8,
@@ -235,6 +268,19 @@ def main(argv=None) -> int:
     ap.add_argument("--no-kernel", action="store_true",
                     help="audit the dist step without the Pallas kernel "
                          "path (R5 then has nothing to check)")
+    ap.add_argument("--source", action="store_true",
+                    help="additionally run the S1-S6 source rules: the "
+                         "AST-level whole-tree audit (PRNG lineage, "
+                         "host/trace boundary, static-arg hygiene, "
+                         "source donation, docs drift, dead seams) over "
+                         "the traced-reachability call graph")
+    ap.add_argument("--baseline", default="results/SOURCE_BASELINE.json",
+                    help="committed fingerprint->reason baseline applied "
+                         "to --source findings")
+    ap.add_argument("--regen-baseline", action="store_true",
+                    help="regenerate --baseline from the current --source "
+                         "error findings (curated reasons are preserved); "
+                         "same commit-the-diff contract as --regen-golden")
     ap.add_argument("--out", default=None,
                     help="write ANALYSIS.json here (default: print summary "
                          "only)")
@@ -265,15 +311,25 @@ def main(argv=None) -> int:
         oracle.extend(f10)
         oracle.meta.update(m10)
         reports.append(oracle)
+    extra = {"jax_version": jax.__version__,
+             "backend": jax.default_backend(),
+             "argv": vars(args)}
+    if args.source:
+        print("[analysis] source audit (S1-S6) over the traced-reachability "
+              "call graph", flush=True)
+        src_report, src_meta = audit_source(args.baseline,
+                                            regen=args.regen_baseline)
+        reports.append(src_report)
+        extra["source"] = src_meta
 
     suppressions = default_suppressions(jax.default_backend())
     for r in reports:
+        # source findings arrive with their baseline suppressions already
+        # applied; apply_suppressions only ever ADDS suppressions, so
+        # running it uniformly is safe.
         apply_suppressions(r.findings, suppressions)
 
-    doc = render_report(reports, suppressions,
-                        extra={"jax_version": jax.__version__,
-                               "backend": jax.default_backend(),
-                               "argv": vars(args)})
+    doc = render_report(reports, suppressions, extra=extra)
     for r in reports:
         c = r.counts()
         print(f"[analysis] {r.program}: {c['errors']} error(s), "

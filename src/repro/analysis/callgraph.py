@@ -1,0 +1,947 @@
+"""Traced-reachability call graph over the repo's Python sources.
+
+Pure stdlib ``ast`` — nothing is imported or executed. The graph answers the
+one question every source-level jax rule needs before it can fire in the
+right context: *does this function run under a trace?* A jaxpr/HLO audit
+(R1-R11) only sees the programs ``repro.analysis.__main__`` happens to build;
+this graph sees every function the SOURCE can reach from a trace boundary —
+the other nine registry models, every compressor branch, the fault paths —
+whether or not any committed config lowers them.
+
+Construction:
+
+1. **Index** every function (module-level, methods, nested closures,
+   lambdas) and class across the given roots, plus each module's import
+   aliases, so dotted calls (``jnp.sum``, ``sparq.make_step``) resolve to
+   canonical names.
+2. **Edges**: each function body yields resolved call edges, the function
+   references it passes as arguments, the local functions it returns (so
+   ``jax.jit(make_step(cfg))`` marks ``make_step``'s inner ``step``), and
+   which of its own parameters it invokes (directly or inside a nested
+   closure — ``make_runner``'s ``step_fn`` is called from the scanned
+   ``step_body``).
+3. **Fixpoint**: traced-entry functions are those passed to a
+   :data:`TRACE_WRAPPERS` call (``jax.jit``/``lax.scan``/``lax.cond``/
+   ``shard_map``/``pallas_call``/...) or decorated with one; tracedness
+   propagates along resolved call edges AND through invoked parameters —
+   if traced ``step_body`` invokes ``make_runner``'s ``step_fn``, every
+   function any caller passes as ``step_fn`` is traced too.
+
+Classification: ``traced`` (reachable from a trace boundary), ``host``
+(reachable from module import / ``main`` / ``test_*`` roots outside any
+trace), ``both``, or ``unreachable`` — the last is S6's dead-seam signal.
+
+Function references are tracked symbolically: a plain qualname is the
+function itself, ``ret:F`` is whatever ``F`` returns (expanded lazily once
+every module is walked, so ``step = make_step(cfg)`` resolves to the inner
+``step`` regardless of definition order), and ``inst:C`` is an instance of
+class ``C`` whose call resolves to ``C.__call__``. Method calls on values
+whose type is statically unknown resolve by method name across the indexed
+classes (``flt.apply`` -> ``FaultPlan.apply``); ambiguous names resolve to
+every candidate, which over-approximates reachability — the safe direction
+for a linter.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple, Union
+
+# Canonical dotted names whose function-valued arguments jax traces.
+TRACE_WRAPPERS = frozenset({
+    "jax.jit", "jax.pmap", "jax.vmap", "jax.grad", "jax.value_and_grad",
+    "jax.jacfwd", "jax.jacrev", "jax.hessian", "jax.checkpoint", "jax.remat",
+    "jax.make_jaxpr", "jax.eval_shape", "jax.linearize", "jax.vjp", "jax.jvp",
+    "jax.lax.scan", "jax.lax.cond", "jax.lax.while_loop", "jax.lax.switch",
+    "jax.lax.fori_loop", "jax.lax.map", "jax.lax.associative_scan",
+    "jax.experimental.shard_map.shard_map",
+    "jax.experimental.pallas.pallas_call",
+})
+
+MODULE_FN = "<module>"
+
+# method names too generic to resolve by name across classes (dict/list/str
+# builtins shadow them at most call sites, so a name match would fabricate
+# edges from every ``d.get(...)``/``s.append(...)`` in the tree)
+_GENERIC_METHODS = frozenset({
+    "get", "items", "keys", "values", "pop", "append", "add", "extend",
+    "copy", "setdefault", "sort", "reverse", "insert", "remove", "clear",
+    "join", "format", "startswith", "endswith", "strip", "split", "encode",
+    "decode", "mean", "sum", "min", "max", "reshape", "astype", "tolist",
+    "item", "count", "index", "replace", "update", "read", "write",
+})
+
+ArgKey = Union[int, str]  # positional index (as written) or keyword name
+
+# wrapper keywords that carry configuration, not traceable callables —
+# a sharding builder's result passed as in_shardings= must not become a
+# traced entry
+_WRAPPER_CONFIG_KWS = frozenset({
+    "in_shardings", "out_shardings", "static_argnums", "static_argnames",
+    "donate_argnums", "donate_argnames", "device", "backend", "axis_name",
+    "in_axes", "out_axes", "is_leaf", "length", "reverse", "unroll",
+    "grid", "out_shape", "grid_spec", "in_specs", "out_specs", "mesh",
+    "check_rep", "check_vma", "interpret", "scratch_shapes", "has_aux",
+})
+
+_COMPOUND = (ast.If, ast.For, ast.AsyncFor, ast.While, ast.With,
+             ast.AsyncWith, ast.Try)
+
+
+@dataclasses.dataclass
+class CallSite:
+    """One call expression inside ``context``'s body."""
+
+    context: str                 # qualname of the containing function
+    callee: str                  # resolved dotted display name
+    resolved: Tuple[str, ...]    # qualnames and/or ret:/inst: markers
+    lineno: int
+    func_args: Tuple[Tuple[ArgKey, Tuple[str, ...]], ...] = ()
+                                 # function refs passed as arguments
+    node: Optional[ast.Call] = None
+
+
+@dataclasses.dataclass
+class WrapperSite:
+    """A TRACE_WRAPPERS call or decorator: ``jax.jit(f, ...)``."""
+
+    context: str
+    wrapper: str                 # canonical entry of TRACE_WRAPPERS
+    lineno: int
+    file: str
+    targets: Tuple[str, ...]     # function-ref markers traced by this site
+    keywords: Dict[str, ast.expr] = dataclasses.field(default_factory=dict)
+    target_node: Optional[ast.expr] = None
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    qualname: str
+    module: str
+    name: str
+    file: str
+    lineno: int
+    params: Tuple[str, ...]
+    node: ast.AST                # FunctionDef | Lambda | Module (pseudo)
+    parent: Optional[str] = None        # enclosing function qualname
+    class_name: Optional[str] = None    # defining class qualname for methods
+    decorators: Tuple[str, ...] = ()
+    has_vararg: bool = False
+    calls: List[CallSite] = dataclasses.field(default_factory=list)
+    returned: Set[str] = dataclasses.field(default_factory=set)
+                                 # function refs appearing in return exprs
+    param_call_contexts: Dict[str, Set[str]] = dataclasses.field(
+        default_factory=dict)    # param -> bodies that call it
+    param_forwards: Dict[str, Set[Tuple[str, ArgKey]]] = dataclasses.field(
+        default_factory=dict)    # param -> (callee ref, arg key)
+    param_to_wrapper: Set[str] = dataclasses.field(default_factory=set)
+    key_origins: Dict[str, str] = dataclasses.field(default_factory=dict)
+                                 # local var -> "prngkey" | "derived"
+                                 # (S1's cross-scope stream lookups)
+
+
+@dataclasses.dataclass
+class ClassInfo:
+    qualname: str
+    module: str
+    name: str
+    file: str
+    lineno: int
+    node: ast.ClassDef
+    methods: Dict[str, str] = dataclasses.field(default_factory=dict)
+    bases: Tuple[str, ...] = ()
+    is_dataclass: bool = False
+    frozen: bool = False
+
+
+@dataclasses.dataclass
+class _Scope:
+    """One lexical frame while walking a module: its symbol table.
+
+    name -> ("func", qual) | ("class", qual) | ("import", dotted)
+          | ("param", owner qual) | ("refs", frozenset of func-ref markers)
+    """
+
+    qualname: str
+    names: Dict[str, Tuple[str, object]] = dataclasses.field(
+        default_factory=dict)
+
+
+def module_name_for(path: str, root: str) -> str:
+    rel = os.path.relpath(path, root)
+    parts = rel[:-3].split(os.sep)  # strip .py
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def repo_sources(
+    root: str,
+    subdirs: Sequence[str] = ("src", "tests", "benchmarks", "examples"),
+) -> Dict[str, Tuple[str, str]]:
+    """{module name: (file path, source)} for every .py under the subdirs."""
+    out: Dict[str, Tuple[str, str]] = {}
+    for sub in subdirs:
+        base = os.path.join(root, sub)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+            for fn in sorted(filenames):
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                with open(path, "r") as f:
+                    src = f.read()
+                out[module_name_for(path, root)] = (path, src)
+    return out
+
+
+def _flatten_attr(node: ast.expr) -> Optional[List[str]]:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        parts.reverse()
+        return parts
+    return None
+
+
+def _wrapper_match(dotted: str) -> Optional[str]:
+    """Canonical TRACE_WRAPPERS entry this resolved name denotes, if any.
+
+    Matches on dotted-component suffix (``lax.scan`` hits ``jax.lax.scan``)
+    but never on a single bare component — a bare name that survived scope
+    resolution is a local or builtin (``map``, ``cond``), not a jax symbol —
+    except ``pallas_call``/``shard_map``, which are unambiguous.
+    """
+    dp = dotted.split(".")
+    if len(dp) == 1 and dp[0] not in ("pallas_call", "shard_map"):
+        return None
+    for w in TRACE_WRAPPERS:
+        wp = w.split(".")
+        if wp[-len(dp):] == dp or dp[-len(wp):] == wp:
+            return w
+    if dp[-1] == "pallas_call":
+        return "jax.experimental.pallas.pallas_call"
+    if dp[-1] == "shard_map":
+        return "jax.experimental.shard_map.shard_map"
+    return None
+
+
+def _dataclass_flags(node: ast.ClassDef) -> Tuple[bool, bool]:
+    for dec in node.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        parts = _flatten_attr(target)
+        if parts is None or parts[-1] != "dataclass":
+            continue
+        frozen = False
+        if isinstance(dec, ast.Call):
+            for kw in dec.keywords:
+                if kw.arg == "frozen" and isinstance(kw.value, ast.Constant):
+                    frozen = bool(kw.value.value)
+        return True, frozen
+    return False, False
+
+
+def _nested_blocks(stmt: ast.stmt) -> List[list]:
+    """Statement lists nested under compound statements (if/for/try/with) —
+    NOT under function/class defs, which get their own scope walk."""
+    if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+        return []
+    out = []
+    for field in ("body", "orelse", "finalbody"):
+        sub = getattr(stmt, field, None)
+        if isinstance(sub, list):
+            out.append(sub)
+    for h in getattr(stmt, "handlers", []):
+        out.append(h.body)
+    return out
+
+
+def _stmt_exprs(stmt: ast.stmt) -> List[ast.expr]:
+    """The statement's own expressions — compound statements contribute only
+    their headers (test/iter/with-items); bodies are walked separately."""
+    if isinstance(stmt, (ast.If, ast.While)):
+        return [stmt.test]
+    if isinstance(stmt, (ast.For, ast.AsyncFor)):
+        return [stmt.iter]
+    if isinstance(stmt, (ast.With, ast.AsyncWith)):
+        return [item.context_expr for item in stmt.items]
+    if isinstance(stmt, ast.Try):
+        return []
+    return [n for n in ast.iter_child_nodes(stmt) if isinstance(n, ast.expr)]
+
+
+def _expr_nodes(expr: ast.expr) -> Iterable[ast.AST]:
+    """Yield every Call and Lambda in the expression without descending into
+    lambda bodies — those are walked in the lambda's own scope."""
+    stack: List[ast.AST] = [expr]
+    while stack:
+        node = stack.pop()
+        if isinstance(node, ast.Lambda):
+            yield node
+            continue
+        if isinstance(node, ast.Call):
+            yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _decorator_names(node: ast.AST, resolver) -> Tuple[str, ...]:
+    out = []
+    for dec in getattr(node, "decorator_list", []):
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        parts = _flatten_attr(target)
+        if parts:
+            out.append(resolver(parts))
+    return tuple(out)
+
+
+class CallGraph:
+    """Index + edges + the traced/host fixpoint. Build via
+    :func:`build_callgraph`; query via ``traced``/``host``/
+    ``classification``/``reachable``."""
+
+    def __init__(self) -> None:
+        self.functions: Dict[str, FunctionInfo] = {}
+        self.classes: Dict[str, ClassInfo] = {}
+        self.modules: Dict[str, str] = {}            # module -> file path
+        self.module_refs: Dict[str, Set[str]] = {}   # names/strings mentioned
+        self.import_aliases: Dict[str, Dict[str, str]] = {}
+                                                     # module -> {name: dotted}
+        self.wrapper_sites: List[WrapperSite] = []
+        self.method_index: Dict[str, List[str]] = {}
+        self.traced_entries: Set[str] = set()
+        self.traced: Set[str] = set()
+        self.host: Set[str] = set()
+        self.traced_params: Set[Tuple[str, str]] = set()
+
+    # -------------------------------------------------------------- queries
+    @property
+    def reachable(self) -> Set[str]:
+        return self.traced | self.host
+
+    def classification(self, qualname: str) -> str:
+        t, h = qualname in self.traced, qualname in self.host
+        if t and h:
+            return "both"
+        if t:
+            return "traced"
+        if h:
+            return "host"
+        return "unreachable"
+
+    def resolve_ref(self, ref: str) -> Tuple[str, ...]:
+        """Expand a func-ref marker to concrete function qualnames."""
+        out: Set[str] = set()
+        self._expand_ref(ref, out, set())
+        return tuple(sorted(out))
+
+    def _expand_ref(self, ref: str, out: Set[str], seen: Set[str]) -> None:
+        if ref in seen:
+            return
+        seen.add(ref)
+        if ref.startswith("ret:"):
+            fn = self.functions.get(ref[4:])
+            if fn is not None:
+                for r in fn.returned:
+                    self._expand_ref(r, out, seen)
+        elif ref.startswith("inst:"):
+            cls = self.classes.get(ref[5:])
+            if cls is not None and "__call__" in cls.methods:
+                out.add(cls.methods["__call__"])
+        elif ref in self.functions:
+            out.add(ref)
+
+    def site_callees(self, cs: CallSite) -> Set[str]:
+        """Concrete function qualnames a call site can land on. A class in
+        callee position is an instantiation -> __init__/__post_init__."""
+        out: Set[str] = set()
+        for q in cs.resolved:
+            if q.startswith(("ret:", "inst:")):
+                out.update(self.resolve_ref(q))
+            elif q in self.classes:
+                for m in ("__init__", "__post_init__"):
+                    mq = self.classes[q].methods.get(m)
+                    if mq:
+                        out.add(mq)
+            else:
+                out.add(q)
+        return out
+
+    def _expand_callee(self, ref: str) -> Tuple[str, ...]:
+        if ref.startswith(("ret:", "inst:")):
+            return self.resolve_ref(ref)
+        return (ref,) if ref in self.functions else ()
+
+    # ------------------------------------------------------------- fixpoint
+    def _callable_param(self, qual: str,
+                        key: ArgKey) -> Optional[Tuple[str, str]]:
+        """(owner qualname, param name) an argument lands on, or None."""
+        fn = self.functions.get(qual)
+        if fn is None:
+            return None
+        params = list(fn.params)
+        if isinstance(key, str):
+            return (fn.qualname, key) if key in params else None
+        idx = key + (1 if params[:1] == ["self"] else 0)
+        if 0 <= idx < len(params):
+            return fn.qualname, params[idx]
+        return None
+
+    def run_fixpoint(self, roots: Iterable[str]) -> None:
+        # host reachability: BFS over call edges + passed/returned func refs
+        frontier = [q for q in roots if q in self.functions]
+        self.host = set(frontier)
+        while frontier:
+            nxt: List[str] = []
+            for q in frontier:
+                fn = self.functions[q]
+                adj: Set[str] = set()
+                for cs in fn.calls:
+                    adj.update(self.site_callees(cs))
+                    for _, refs in cs.func_args:
+                        for r in refs:
+                            adj.update(self.resolve_ref(r))
+                for r in fn.returned:
+                    adj.update(self.resolve_ref(r))
+                for target in adj:
+                    if target not in self.host:
+                        self.host.add(target)
+                        nxt.append(target)
+            frontier = nxt
+
+        # traced fixpoint: entries + call-edge closure + invoked-parameter
+        # propagation (see module docstring)
+        self.traced = set(self.traced_entries)
+        changed = True
+        while changed:
+            changed = False
+            frontier = list(self.traced)
+            while frontier:
+                nxt = []
+                for q in frontier:
+                    fn = self.functions.get(q)
+                    if fn is None:
+                        continue
+                    for cs in fn.calls:
+                        for target in self.site_callees(cs):
+                            if target not in self.traced:
+                                self.traced.add(target)
+                                nxt.append(target)
+                frontier = nxt
+            # a param is traced-invoked when a traced body calls it, its
+            # owner hands it straight to a wrapper, or it is forwarded into
+            # another traced-invoked param
+            for fn in self.functions.values():
+                for p in fn.params:
+                    pkey = (fn.qualname, p)
+                    if pkey in self.traced_params:
+                        continue
+                    hit = p in fn.param_to_wrapper
+                    for ctx in fn.param_call_contexts.get(p, ()):
+                        hit = hit or ctx in self.traced
+                    for callee, akey in fn.param_forwards.get(p, ()):
+                        for cq in self._expand_callee(callee):
+                            hit = hit or (self._callable_param(cq, akey)
+                                          in self.traced_params)
+                    if hit:
+                        self.traced_params.add(pkey)
+                        changed = True
+            # call sites feeding traced params mark the passed functions
+            for fn in self.functions.values():
+                for cs in fn.calls:
+                    for akey, refs in cs.func_args:
+                        for target in self.site_callees(cs):
+                            tgt = self._callable_param(target, akey)
+                            if tgt is None or tgt not in self.traced_params:
+                                continue
+                            for r in refs:
+                                for q in self.resolve_ref(r):
+                                    if q not in self.traced:
+                                        self.traced.add(q)
+                                        self.traced_entries.add(q)
+                                        changed = True
+
+
+class _Builder:
+    """Two passes per module: index definitions module-wide first (so forward
+    references resolve), then walk bodies in source order for edges."""
+
+    def __init__(self, graph: CallGraph) -> None:
+        self.g = graph
+
+    # --------------------------------------------------------------- pass 1
+    def index_module(self, module: str, path: str, tree: ast.Module) -> None:
+        self.g.modules[module] = path
+        refs: Set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Name):
+                refs.add(node.id)
+            elif isinstance(node, ast.Attribute):
+                refs.add(node.attr)
+            elif isinstance(node, ast.Constant) and isinstance(node.value, str):
+                refs.add(node.value)
+        self.g.module_refs[module] = refs
+        self._index_body(module, path, tree.body, prefix=module,
+                         class_name=None, parent=None)
+        pseudo_qual = f"{module}.{MODULE_FN}"
+        self.g.functions[pseudo_qual] = FunctionInfo(
+            qualname=pseudo_qual, module=module, name=MODULE_FN, file=path,
+            lineno=1, params=(), node=tree)
+
+    def _index_body(self, module: str, path: str, body, prefix: str,
+                    class_name: Optional[str],
+                    parent: Optional[str]) -> None:
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}.{node.name}"
+                a = node.args
+                self.g.functions[qual] = FunctionInfo(
+                    qualname=qual, module=module, name=node.name, file=path,
+                    lineno=node.lineno,
+                    params=tuple(p.arg for p in (a.posonlyargs + a.args)),
+                    node=node, parent=parent, class_name=class_name,
+                    has_vararg=a.vararg is not None)
+                if class_name is not None:
+                    self.g.classes[class_name].methods[node.name] = qual
+                    self.g.method_index.setdefault(node.name, []).append(qual)
+                self._index_body(module, path, node.body, qual,
+                                 class_name=None, parent=qual)
+            elif isinstance(node, ast.ClassDef):
+                qual = f"{prefix}.{node.name}"
+                bases = tuple(".".join(p) for b in node.bases
+                              if (p := _flatten_attr(b)) is not None)
+                is_dc, frozen = _dataclass_flags(node)
+                self.g.classes[qual] = ClassInfo(
+                    qualname=qual, module=module, name=node.name, file=path,
+                    lineno=node.lineno, node=node, bases=bases,
+                    is_dataclass=is_dc, frozen=frozen)
+                self._index_body(module, path, node.body, qual,
+                                 class_name=qual, parent=parent)
+            elif isinstance(node, _COMPOUND):
+                for sub in _nested_blocks(node):
+                    self._index_body(module, path, sub, prefix,
+                                     class_name, parent)
+
+    # --------------------------------------------------------------- pass 2
+    def walk_module(self, module: str, tree: ast.Module) -> None:
+        scope = _Scope(qualname=f"{module}.{MODULE_FN}")
+        self._seed_defs(tree.body, scope, module)
+        self._walk_body(module, tree.body,
+                        self.g.functions[f"{module}.{MODULE_FN}"], [scope])
+        self.g.import_aliases[module] = {
+            name: str(val) for name, (kind, val) in scope.names.items()
+            if kind == "import"}
+
+    def _collect_imports(self, module: str, node: ast.stmt,
+                         scope: _Scope) -> None:
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.asname:
+                    scope.names[alias.asname] = ("import", alias.name)
+                else:
+                    root = alias.name.split(".")[0]
+                    scope.names[root] = ("import", root)
+        elif isinstance(node, ast.ImportFrom):
+            base = node.module or ""
+            if node.level:
+                pkg = module.split(".")[: len(module.split(".")) - node.level]
+                base = ".".join(pkg + ([node.module] if node.module else []))
+            for alias in node.names:
+                scope.names[alias.asname or alias.name] = (
+                    "import", f"{base}.{alias.name}" if base else alias.name)
+
+    def _seed_defs(self, body, scope: _Scope, prefix: str) -> None:
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                scope.names[node.name] = ("func", f"{prefix}.{node.name}")
+            elif isinstance(node, ast.ClassDef):
+                scope.names[node.name] = ("class", f"{prefix}.{node.name}")
+            elif isinstance(node, _COMPOUND):
+                for sub in _nested_blocks(node):
+                    self._seed_defs(sub, scope, prefix)
+
+    # ---- resolution ----
+    def _resolve_parts(self, parts: List[str],
+                       scopes: List[_Scope]) -> Tuple[str, Tuple[str, ...]]:
+        """(display dotted name, resolved markers) for an attribute chain."""
+        root = parts[0]
+        for scope in reversed(scopes):
+            if root not in scope.names:
+                continue
+            kind, val = scope.names[root]
+            if kind in ("import", "func", "class"):
+                dotted = ".".join([str(val)] + parts[1:])
+                return dotted, self._index_lookup(dotted)
+            if kind == "refs" and len(parts) == 1:
+                refs = val if isinstance(val, frozenset) else frozenset()
+                return root, tuple(sorted(refs))
+            if kind == "param" and len(parts) > 1:
+                break  # method call on a parameter: name fallback below
+            if len(parts) == 1:
+                return root, ()
+            break
+        dotted = ".".join(parts)
+        hit = self._index_lookup(dotted)
+        if hit:
+            return dotted, hit
+        if len(parts) > 1 and parts[-1] not in _GENERIC_METHODS:
+            cands = self.g.method_index.get(parts[-1], [])
+            if 0 < len(cands) <= 8:
+                return dotted, tuple(sorted(cands))
+        return dotted, ()
+
+    def _index_lookup(self, dotted: str) -> Tuple[str, ...]:
+        if dotted in self.g.functions or dotted in self.g.classes:
+            return (dotted,)
+        return ()
+
+    def _func_refs(self, node: ast.expr, scopes: List[_Scope],
+                   owner: FunctionInfo) -> Tuple[str, ...]:
+        """Function-ref markers an argument/return expression denotes."""
+        if isinstance(node, ast.Lambda):
+            return (
+                f"{owner.qualname}.<lambda:{node.lineno}:{node.col_offset}>",)
+        if isinstance(node, (ast.Name, ast.Attribute)):
+            parts = _flatten_attr(node)
+            if parts is None:
+                return ()
+            _, quals = self._resolve_parts(parts, scopes)
+            return tuple(f"inst:{q}" if q in self.g.classes else q
+                         for q in quals)
+        if isinstance(node, ast.Call):
+            parts = _flatten_attr(node.func)
+            if parts is not None:
+                dotted, quals = self._resolve_parts(parts, scopes)
+                # functools.partial(f, ...) denotes f itself
+                if dotted.split(".")[-1] == "partial" and node.args:
+                    return self._func_refs(node.args[0], scopes, owner)
+                return tuple(f"inst:{q}" if q in self.g.classes
+                             else f"ret:{q}" for q in quals
+                             if not q.startswith(("ret:", "inst:")))
+            return ()
+        if isinstance(node, ast.IfExp):
+            return (self._func_refs(node.body, scopes, owner)
+                    + self._func_refs(node.orelse, scopes, owner))
+        if isinstance(node, ast.Tuple):
+            out: List[str] = []
+            for elt in node.elts:
+                out.extend(self._func_refs(elt, scopes, owner))
+            return tuple(out)
+        return ()
+
+    # ---- the body walk ----
+    def _walk_body(self, module: str, body, fn: FunctionInfo,
+                   scopes: List[_Scope]) -> None:
+        for stmt in body:
+            self._walk_stmt(module, stmt, fn, scopes)
+
+    def _walk_stmt(self, module: str, stmt: ast.stmt, fn: FunctionInfo,
+                   scopes: List[_Scope]) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            self._enter_function(module, stmt, fn, scopes)
+            return
+        if isinstance(stmt, ast.ClassDef):
+            prefix = fn.qualname[: -len("." + MODULE_FN)] \
+                if fn.name == MODULE_FN else fn.qualname
+            qual = f"{prefix}.{stmt.name}"
+            for sub in stmt.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    self._enter_function(module, sub, fn, scopes,
+                                         class_qual=qual)
+            return
+        if isinstance(stmt, (ast.Import, ast.ImportFrom)):
+            self._collect_imports(module, stmt, scopes[-1])
+            return
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+            self._record_assign(stmt.targets[0], stmt.value, fn, scopes)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self._record_assign(stmt.target, stmt.value, fn, scopes)
+        elif isinstance(stmt, ast.Return) and stmt.value is not None:
+            fn.returned.update(self._func_refs(stmt.value, scopes, fn))
+        for expr in _stmt_exprs(stmt):
+            for node in _expr_nodes(expr):
+                if isinstance(node, ast.Lambda):
+                    self._enter_lambda(module, node, fn, scopes)
+                else:
+                    self._record_call(node, fn, scopes)
+        for sub in _nested_blocks(stmt):
+            self._walk_body(module, sub, fn, scopes)
+
+    def _record_assign(self, target: ast.expr, value: ast.expr,
+                       fn: FunctionInfo, scopes: List[_Scope]) -> None:
+        refs = self._func_refs(value, scopes, fn)
+        origin = self._key_origin(value, scopes)
+        if isinstance(target, ast.Name):
+            if refs:
+                scopes[-1].names[target.id] = ("refs", frozenset(refs))
+            if origin is not None:
+                fn.key_origins[target.id] = origin
+        elif isinstance(target, ast.Tuple) and isinstance(value, ast.Call):
+            # tuple-unpacked builder results: each name may be any returned
+            # func ref (over-approximation; positional mapping rarely needed)
+            for elt in target.elts:
+                if not isinstance(elt, ast.Name):
+                    continue
+                if refs:
+                    scopes[-1].names[elt.id] = ("refs", frozenset(refs))
+                if origin is not None:
+                    fn.key_origins[elt.id] = origin
+
+    def _key_origin(self, value: ast.expr,
+                    scopes: List[_Scope]) -> Optional[str]:
+        """'prngkey' for ``x = jax.random.PRNGKey(...)``, 'derived' for
+        split/fold_in results — S1's cross-scope undomained-stream lookup."""
+        if not isinstance(value, ast.Call):
+            return None
+        parts = _flatten_attr(value.func)
+        if parts is None:
+            return None
+        dotted, _ = self._resolve_parts(parts, scopes)
+        tail = dotted.split(".")[-1]
+        if tail == "PRNGKey" or (dotted.startswith("jax.random.")
+                                 and tail == "key"):
+            return "prngkey"
+        if dotted.startswith("jax.random.") and tail in (
+                "split", "fold_in", "clone", "wrap_key_data"):
+            return "derived"
+        return None
+
+    def _record_call(self, call: ast.Call, fn: FunctionInfo,
+                     scopes: List[_Scope]) -> None:
+        parts = _flatten_attr(call.func)
+        if parts is None:
+            # immediately-applied wrapper factory:
+            # ``partial(jax.jit, **kw)(f)`` — the inner partial call holds
+            # ONLY the wrapper, so the outer call's args are the targets
+            if (isinstance(call.func, ast.Call) and call.func.args
+                    and len(call.func.args) == 1):
+                inner = _flatten_attr(call.func.func)
+                p0 = _flatten_attr(call.func.args[0])
+                if inner is not None and p0 is not None and \
+                        self._resolve_parts(inner, scopes)[0] \
+                            .split(".")[-1] == "partial":
+                    wrapper = _wrapper_match(
+                        self._resolve_parts(p0, scopes)[0])
+                    if wrapper is not None:
+                        targets: List[str] = []
+                        tnode: Optional[ast.expr] = None
+                        for i, arg in enumerate(call.args):
+                            refs = self._func_refs(arg, scopes, fn)
+                            if refs and i == 0:
+                                tnode = arg
+                            targets.extend(refs)
+                            self._note_param_wrapper(arg, scopes)
+                        self.g.wrapper_sites.append(WrapperSite(
+                            context=fn.qualname, wrapper=wrapper,
+                            lineno=getattr(call, "lineno", fn.lineno),
+                            file=fn.file,
+                            targets=tuple(sorted(set(targets))),
+                            keywords={kw.arg: kw.value
+                                      for kw in call.func.keywords
+                                      if kw.arg is not None},
+                            target_node=tnode))
+            return
+        dotted, quals = self._resolve_parts(parts, scopes)
+        wrapper = _wrapper_match(dotted) if not quals else None
+        args, keywords = list(call.args), list(call.keywords)
+        if wrapper is None and dotted.split(".")[-1] == "partial" and args:
+            p0 = _flatten_attr(args[0])
+            if p0 is not None:
+                wrapper = _wrapper_match(self._resolve_parts(p0, scopes)[0])
+                if wrapper is not None:
+                    args = args[1:]  # partial(jax.jit, **kw)(f) == jit-site
+        if wrapper is not None:
+            targets: List[str] = []
+            tnode: Optional[ast.expr] = None
+            for i, arg in enumerate(args):
+                refs = self._func_refs(arg, scopes, fn)
+                if refs and i == 0:
+                    tnode = arg
+                targets.extend(refs)
+                self._note_param_wrapper(arg, scopes)
+            for kw in keywords:
+                if kw.arg is not None and kw.arg not in _WRAPPER_CONFIG_KWS:
+                    targets.extend(self._func_refs(kw.value, scopes, fn))
+            self.g.wrapper_sites.append(WrapperSite(
+                context=fn.qualname, wrapper=wrapper,
+                lineno=getattr(call, "lineno", fn.lineno), file=fn.file,
+                targets=tuple(sorted(set(targets))),
+                keywords={kw.arg: kw.value for kw in keywords
+                          if kw.arg is not None},
+                target_node=tnode))
+            return
+        # ordinary call: param invocation, forwards, edges, func args
+        if len(parts) == 1:
+            owner_param = self._param_owner(parts[0], scopes)
+            if owner_param is not None:
+                owner, pname = owner_param
+                self.g.functions[owner].param_call_contexts.setdefault(
+                    pname, set()).add(fn.qualname)
+        func_args: List[Tuple[ArgKey, Tuple[str, ...]]] = []
+        for i, arg in enumerate(args):
+            refs = self._func_refs(arg, scopes, fn)
+            if refs:
+                func_args.append((i, refs))
+            self._note_param_forward(arg, quals, i, scopes)
+        for kw in keywords:
+            if kw.arg is None:
+                continue
+            refs = self._func_refs(kw.value, scopes, fn)
+            if refs:
+                func_args.append((kw.arg, refs))
+            self._note_param_forward(kw.value, quals, kw.arg, scopes)
+        fn.calls.append(CallSite(
+            context=fn.qualname, callee=dotted, resolved=quals,
+            lineno=getattr(call, "lineno", fn.lineno),
+            func_args=tuple(func_args), node=call))
+
+    def _param_owner(self, root: str,
+                     scopes: List[_Scope]) -> Optional[Tuple[str, str]]:
+        for scope in reversed(scopes):
+            if root in scope.names:
+                kind, val = scope.names[root]
+                if kind == "param":
+                    return str(val), root
+                return None
+        return None
+
+    def _note_param_wrapper(self, arg: ast.expr,
+                            scopes: List[_Scope]) -> None:
+        if not isinstance(arg, ast.Name):
+            return
+        owner_param = self._param_owner(arg.id, scopes)
+        if owner_param is not None:
+            owner, pname = owner_param
+            self.g.functions[owner].param_to_wrapper.add(pname)
+
+    def _note_param_forward(self, arg: ast.expr, callee_refs, key: ArgKey,
+                            scopes: List[_Scope]) -> None:
+        if not isinstance(arg, ast.Name):
+            return
+        owner_param = self._param_owner(arg.id, scopes)
+        if owner_param is None:
+            return
+        owner, pname = owner_param
+        for q in callee_refs:
+            self.g.functions[owner].param_forwards.setdefault(
+                pname, set()).add((q, key))
+
+    def _enter_function(self, module: str, node, parent_fn: FunctionInfo,
+                        scopes: List[_Scope],
+                        class_qual: Optional[str] = None) -> None:
+        prefix = class_qual if class_qual is not None else (
+            parent_fn.qualname[: -len("." + MODULE_FN)]
+            if parent_fn.name == MODULE_FN else parent_fn.qualname)
+        qual = f"{prefix}.{node.name}"
+        fn = self.g.functions.get(qual)
+        if fn is None:
+            a = node.args
+            fn = FunctionInfo(
+                qualname=qual, module=module, name=node.name,
+                file=parent_fn.file, lineno=node.lineno,
+                params=tuple(p.arg for p in (a.posonlyargs + a.args)),
+                node=node, parent=parent_fn.qualname, class_name=class_qual,
+                has_vararg=a.vararg is not None)
+            self.g.functions[qual] = fn
+            if class_qual is not None:
+                self.g.classes[class_qual].methods[node.name] = qual
+                self.g.method_index.setdefault(node.name, []).append(qual)
+        fn.decorators = _decorator_names(
+            node, lambda parts: self._resolve_parts(parts, scopes)[0])
+        self._wrapper_decorators(node, fn, scopes)
+        scope = _Scope(qualname=qual)
+        for p in fn.params:
+            scope.names[p] = ("param", qual)
+        for p in node.args.kwonlyargs:
+            scope.names[p.arg] = ("param", qual)
+        inner = scopes + [scope]
+        self._seed_defs(node.body, scope, qual)
+        self._walk_body(module, node.body, fn, inner)
+
+    def _wrapper_decorators(self, node, fn: FunctionInfo,
+                            scopes: List[_Scope]) -> None:
+        for dec in node.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            parts = _flatten_attr(target)
+            if parts is None:
+                continue
+            dotted, _ = self._resolve_parts(parts, scopes)
+            wrapper = _wrapper_match(dotted)
+            kws: Dict[str, ast.expr] = {}
+            if isinstance(dec, ast.Call):
+                kws = {kw.arg: kw.value for kw in dec.keywords
+                       if kw.arg is not None}
+                if wrapper is None and dotted.split(".")[-1] == "partial" \
+                        and dec.args:
+                    p0 = _flatten_attr(dec.args[0])
+                    if p0 is not None:
+                        wrapper = _wrapper_match(
+                            self._resolve_parts(p0, scopes)[0])
+            if wrapper is not None:
+                self.g.wrapper_sites.append(WrapperSite(
+                    context=fn.qualname, wrapper=wrapper, lineno=dec.lineno,
+                    file=fn.file, targets=(fn.qualname,), keywords=kws))
+                self.g.traced_entries.add(fn.qualname)
+
+    def _enter_lambda(self, module: str, node: ast.Lambda,
+                      parent_fn: FunctionInfo, scopes: List[_Scope]) -> None:
+        qual = (f"{parent_fn.qualname}."
+                f"<lambda:{node.lineno}:{node.col_offset}>")
+        if qual in self.g.functions:
+            return
+        a = node.args
+        fn = FunctionInfo(
+            qualname=qual, module=module, name="<lambda>",
+            file=parent_fn.file, lineno=node.lineno,
+            params=tuple(p.arg for p in (a.posonlyargs + a.args)),
+            node=node, parent=parent_fn.qualname,
+            has_vararg=a.vararg is not None)
+        self.g.functions[qual] = fn
+        scope = _Scope(qualname=qual)
+        for p in fn.params:
+            scope.names[p] = ("param", qual)
+        for p in a.kwonlyargs:
+            scope.names[p.arg] = ("param", qual)
+        inner = scopes + [scope]
+        fn.returned.update(self._func_refs(node.body, inner, fn))
+        for sub in _expr_nodes(node.body):
+            if isinstance(sub, ast.Lambda):
+                self._enter_lambda(module, sub, fn, inner)
+            else:
+                self._record_call(sub, fn, inner)
+
+
+def host_roots(graph: CallGraph) -> List[str]:
+    """Where host execution starts: module import, ``main``, ``test_*``."""
+    return [q for q, fn in graph.functions.items()
+            if fn.name in (MODULE_FN, "main") or fn.name.startswith("test_")]
+
+
+def build_callgraph(sources: Dict[str, Tuple[str, str]]) -> CallGraph:
+    """Build + classify. ``sources`` maps module name -> (path, source);
+    see :func:`repo_sources` for the on-disk layout."""
+    graph = CallGraph()
+    builder = _Builder(graph)
+    trees: Dict[str, ast.Module] = {}
+    for module, (path, src) in sorted(sources.items()):
+        tree = ast.parse(src, filename=path)
+        trees[module] = tree
+        builder.index_module(module, path, tree)
+    for module, tree in sorted(trees.items()):
+        builder.walk_module(module, tree)
+    for site in graph.wrapper_sites:
+        for r in site.targets:
+            graph.traced_entries.update(graph.resolve_ref(r))
+    graph.run_fixpoint(host_roots(graph))
+    return graph
+
+
+def build_repo_callgraph(root: str) -> CallGraph:
+    return build_callgraph(repo_sources(root))

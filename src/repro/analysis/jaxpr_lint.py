@@ -128,8 +128,11 @@ def lint_carry_dtypes(in_tree_leaves, out_tree_leaves, *,
             f"carry structure changed: {len(in_tree_leaves)} leaves in, "
             f"{len(out_tree_leaves)} out", location=program))
         return out
+    # strict: in/out lengths are checked equal above, and `labels` is
+    # derived from the same flattened tree — a length mismatch here is a
+    # caller bug worth the ValueError.
     for name, a, b in zip(labels, in_tree_leaves, out_tree_leaves,
-                          strict=False):
+                          strict=True):
         if a.dtype != b.dtype:
             out.append(finding(
                 "R2",

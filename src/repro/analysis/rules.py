@@ -60,9 +60,33 @@ lowered program:
   documented small-bytes metrics allowance; unexplained node-axis bytes
   mean the wire cost and the charged bits have drifted apart.
 
+The source-level pass (analysis/source_lint.py on top of the
+analysis/callgraph.py traced-reachability graph) lints the SOURCE rather than
+any lowered program, so unexercised registry models and compressor branches
+are covered too:
+
+* **S1 prng-key-lineage** — no key is sampled by >=2 ``jax.random`` draws
+  without an intervening rebind, no ``fold_in`` repeats a constant on the
+  same key, no ``PRNGKey`` construction inside traced code, and no traced
+  ``fold_in(raw_prngkey, data)`` without a constant stream tag first.
+* **S2 host-trace-boundary** — traced-reachable code contains no ``print``,
+  no ``float()``/``.item()``/``np.*`` on traced values, no Python
+  ``if``/``while`` on traced values, and no closure mutation (taint is
+  call-site-sensitive: closures and shapes stay clean).
+* **S3 static-arg-hygiene** — static jit args bound to non-frozen dataclass
+  params, mutable signature defaults, mutable dataclass field defaults.
+* **S4 donation-source** — source twin of R1: ``donate_argnums`` in range,
+  donating only into functions that return, donated params actually read.
+* **S5 docs-cli-drift** — every launch/* ``add_argument`` flag appears in
+  README; the README rule table bijects with this catalog.
+* **S6 dead-seam** — every registry entry (compressor, config, schedule) is
+  reachable from some entry point, bench, or test.
+
 Suppressions are explicit and documented: a ``{rule_id: reason}`` mapping (or
 ``{rule_id: {"match": substring, "reason": ...}}``) downgrades matching
 findings to ``suppressed`` — they stay in the report, they stop failing it.
+The source pass additionally supports a committed baseline file
+(results/SOURCE_BASELINE.json) of fingerprinted, grandfathered findings.
 """
 from __future__ import annotations
 
@@ -123,6 +147,26 @@ RULES: Dict[str, Rule] = {r.rule_id: r for r in (
          "every node-axis communication op in the dist lowering is "
          "attributable to the gossip bits model (or the documented "
          "small-bytes metrics allowance); zero unexplained bytes"),
+    Rule("S1", "prng-key-lineage", ERROR,
+         "key linearity at the source level: no >=2 sampler draws on one "
+         "key without a rebind, no repeated fold_in constant, no PRNGKey "
+         "construction or undomained fold_in stream inside traced code"),
+    Rule("S2", "host-trace-boundary", ERROR,
+         "traced-reachable code has no print, no float()/.item()/np.* on "
+         "traced values, no Python if/while on traced values, and no "
+         "closure mutation"),
+    Rule("S3", "static-arg-hygiene", ERROR,
+         "static jit args are hashable (frozen dataclasses), no mutable "
+         "signature or dataclass-field defaults"),
+    Rule("S4", "donation-source", ERROR,
+         "donate_argnums indices exist, the donated-into function returns "
+         "a value, and donated parameters are read by the body"),
+    Rule("S5", "docs-cli-drift", ERROR,
+         "every launch/* add_argument flag is documented in README and the "
+         "README rule table bijects with the rules.py catalog"),
+    Rule("S6", "dead-seam", WARNING,
+         "every registry entry (compressor, config, schedule) is reachable "
+         "from an entry point, bench, or test in the call graph"),
 )}
 
 
@@ -224,9 +268,9 @@ def render_report(reports: Iterable[Report],
         for k, v in r.counts().items():
             totals[k] += v
     doc: Dict[str, object] = {
-        # 2: R6-R11 contract/communication rules joined the catalog
-        # (schema 1 carried R1-R5 only)
-        "schema_version": 2,
+        # 3: source-level S1-S6 rules + the top-level "source" block joined
+        # (schema 2 added R6-R11 contracts; schema 1 carried R1-R5 only)
+        "schema_version": 3,
         "rules": {rid: {"title": r.title, "severity": r.severity,
                         "contract": r.contract}
                   for rid, r in RULES.items()},

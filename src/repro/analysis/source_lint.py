@@ -1,0 +1,982 @@
+"""Source-level S1-S6 auditor: trace-safety and PRNG-lineage lint.
+
+Third leg of ``python -m repro.analysis`` (``--source``), next to the
+jaxpr/HLO lint (R1-R5) and the theory contracts (R6-R11). Those two audit
+the handful of programs ``__main__`` lowers; this one audits the whole
+source tree in the context the :mod:`repro.analysis.callgraph` proves for
+each function:
+
+- **S1 prng-key-lineage** — a key sampled by >=2 ``jax.random.*`` draws
+  without an intervening rebind, ``fold_in`` with a repeated constant on the
+  same key, ``PRNGKey(...)`` construction inside traced code, and an
+  undomained stream: ``fold_in(raw_prngkey, data)`` in traced code without a
+  constant stream tag first (the exact collision SPARQ-SGD's shared
+  (seed, t, sync_round) discipline forbids).
+- **S2 host-trace-boundary** — in traced-reachable code only: ``print``,
+  ``float()``/``int()``/``bool()``/``.item()``/``np.*`` on traced values,
+  Python ``if``/``while`` on traced values, and closure mutation. Taint is
+  call-site-sensitive: entry-point parameters are traced values (minus
+  declared static args) and flow through resolved call edges, so
+  ``cfg.resolved_gamma(d)`` — closure config, shape-derived ``d`` — stays
+  clean while ``float(loss)`` inside a scanned body fires.
+- **S3 static-arg-hygiene** — ``static_argnums``/``static_argnames`` bound
+  to non-frozen dataclass parameters (unhashable => TypeError at the jit
+  boundary), and mutable defaults in signatures / dataclass fields.
+- **S4 donation-source** — source twin of R1: ``donate_argnums`` entries
+  out of range, donating into a function that returns nothing, or donating
+  a parameter the body never reads.
+- **S5 docs-cli-drift** — every ``add_argument`` flag in ``launch/*`` must
+  appear in README; the README rule table must biject with the catalog in
+  :mod:`repro.analysis.rules`.
+- **S6 dead-seam** — registry entries (compressors, configs, schedules)
+  that no entry point, bench, or test can reach: key never mentioned
+  outside the registry's module, value unreachable in the call graph, and
+  the registry itself never enumerated from outside.
+
+Deliberate violations are grandfathered via a committed baseline file
+(``results/SOURCE_BASELINE.json``): findings are fingerprinted by
+(rule, qualname, token) — stable across line drift — and matched entries
+are marked suppressed with the baseline's reason. Regenerate with
+``--regen-baseline`` only when a flagged construct is deliberate, and land
+the regenerated file in the same commit (same policy as golden traces).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.callgraph import (
+    MODULE_FN,
+    CallGraph,
+    FunctionInfo,
+    WrapperSite,
+    _expr_nodes,
+    _flatten_attr,
+    _nested_blocks,
+    _stmt_exprs,
+    build_callgraph,
+    repo_sources,
+)
+from repro.analysis.rules import Finding, finding
+
+BASELINE_SCHEMA = 1
+
+_SAMPLERS_EXEMPT = frozenset({
+    "PRNGKey", "key", "split", "fold_in", "clone", "wrap_key_data",
+    "key_data", "key_impl",
+})
+_SHAPE_ATTRS = frozenset({"shape", "ndim", "dtype", "size", "sharding"})
+_UNTAINTED_CALLS = frozenset({
+    "len", "isinstance", "type", "range", "enumerate", "hasattr", "getattr",
+    "repr", "str", "id", "zip",
+})
+_MUTABLE_FACTORIES = frozenset({
+    "list", "dict", "set", "zeros", "ones", "empty", "array", "arange",
+})
+
+
+@dataclasses.dataclass
+class SourceFinding:
+    """A Finding plus its line-drift-stable baseline fingerprint."""
+
+    finding: Finding
+    fingerprint: str
+
+
+@dataclasses.dataclass
+class SourceAudit:
+    findings: List[SourceFinding]
+    graph: CallGraph
+    meta: Dict[str, object]
+
+    def report_findings(self) -> List[Finding]:
+        return [sf.finding for sf in self.findings]
+
+
+def fingerprint(rule_id: str, qual: str, token: str) -> str:
+    return f"{rule_id}|{qual}|{token}"
+
+
+def load_baseline(path: str) -> Dict[str, str]:
+    """{fingerprint: reason} from a committed baseline file; {} if absent."""
+    if not os.path.exists(path):
+        return {}
+    with open(path, "r") as f:
+        doc = json.load(f)
+    return {e["fingerprint"]: e.get("reason", "grandfathered")
+            for e in doc.get("entries", [])}
+
+
+def write_baseline(audit: "SourceAudit", path: str,
+                   reasons: Optional[Dict[str, str]] = None) -> Dict:
+    """Grandfather every live error-severity finding. Existing reasons (or
+    the ``reasons`` override) are preserved so curated explanations survive
+    regeneration."""
+    keep = dict(load_baseline(path))
+    if reasons:
+        keep.update(reasons)
+    entries = []
+    for sf in audit.findings:
+        if sf.finding.severity != "error":
+            continue
+        entries.append({
+            "fingerprint": sf.fingerprint,
+            "reason": keep.get(sf.fingerprint, "grandfathered; see rule "
+                               + sf.finding.rule_id),
+            "message": sf.finding.message,
+        })
+    doc = {"schema": BASELINE_SCHEMA,
+           "entries": sorted(entries, key=lambda e: e["fingerprint"])}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return doc
+
+
+def apply_baseline(audit: "SourceAudit", baseline: Dict[str, str]) -> int:
+    """Mark baselined findings suppressed; returns the match count."""
+    hits = 0
+    for sf in audit.findings:
+        reason = baseline.get(sf.fingerprint)
+        if reason is not None and not sf.finding.suppressed:
+            sf.finding.suppressed = True
+            sf.finding.suppression_reason = f"baselined: {reason}"
+            hits += 1
+    return hits
+
+
+def _dotted(node: ast.expr, aliases: Dict[str, str]) -> Optional[str]:
+    parts = _flatten_attr(node)
+    if parts is None:
+        return None
+    root = aliases.get(parts[0])
+    if root is not None:
+        parts = root.split(".") + parts[1:]
+    return ".".join(parts)
+
+
+def _stmt_calls(stmt: ast.stmt) -> List[ast.Call]:
+    """Call nodes in the statement's own expressions, lambda interiors
+    excluded (lambdas are linted as their own functions)."""
+    return [n for e in _stmt_exprs(stmt) for n in _expr_nodes(e)
+            if isinstance(n, ast.Call)]
+
+
+def _fn_body(fn: FunctionInfo) -> List[ast.stmt]:
+    node = fn.node
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Module)):
+        return list(node.body)
+    if isinstance(node, ast.Lambda):
+        ret = ast.Return(value=node.body)
+        ast.copy_location(ret, node.body)
+        return [ret]
+    return []
+
+
+def _const_int_set(node: ast.expr) -> Set[int]:
+    """Every constant int mentioned in the expression (over-approximates
+    conditional donate_argnums like ``(0,) if donate else ()``)."""
+    out: Set[int] = set()
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Constant) and isinstance(sub.value, int) \
+                and not isinstance(sub.value, bool):
+            out.add(sub.value)
+    return out
+
+
+def _const_str_set(node: ast.expr) -> Set[str]:
+    return {sub.value for sub in ast.walk(node)
+            if isinstance(sub, ast.Constant) and isinstance(sub.value, str)}
+
+
+def _assigned_names(stmts: Iterable[ast.stmt]) -> Set[str]:
+    """Names bound anywhere in the statements (incl. nested defs' names,
+    for-targets, withitems) — the complement defines a function's free
+    variables."""
+    out: Set[str] = set()
+    for stmt in stmts:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Name) and isinstance(
+                    node.ctx, (ast.Store, ast.Del)):
+                out.add(node.id)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.ClassDef)):
+                out.add(node.name)
+            elif isinstance(node, (ast.Import, ast.ImportFrom)):
+                for alias in node.names:
+                    out.add(alias.asname or alias.name.split(".")[0])
+    return out
+
+
+def _free_names(fn: FunctionInfo) -> Set[str]:
+    body = _fn_body(fn)
+    bound = set(fn.params) | _assigned_names(body)
+    node = fn.node
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+        a = node.args
+        bound.update(p.arg for p in a.kwonlyargs)
+        if a.vararg:
+            bound.add(a.vararg.arg)
+        if a.kwarg:
+            bound.add(a.kwarg.arg)
+    loaded: Set[str] = set()
+    for stmt in body:
+        for n in ast.walk(stmt):
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load):
+                loaded.add(n.id)
+    return loaded - bound
+
+
+class _Linter:
+    def __init__(self, graph: CallGraph,
+                 sources: Dict[str, Tuple[str, str]]) -> None:
+        self.graph = graph
+        self.sources = sources
+        self.findings: List[SourceFinding] = []
+
+    # ------------------------------------------------------------ plumbing
+    def emit(self, rule_id: str, qual: str, token: str, message: str,
+             file: str, lineno: int,
+             severity: Optional[str] = None) -> None:
+        f = finding(rule_id, message, location=f"{file}:{lineno} ({qual})",
+                    severity=severity)
+        self.findings.append(
+            SourceFinding(finding=f, fingerprint=fingerprint(
+                rule_id, qual, token)))
+
+    def _repro_functions(self) -> List[FunctionInfo]:
+        return [fn for fn in self.graph.functions.values()
+                if fn.module.startswith("repro.")]
+
+    def _aliases(self, module: str) -> Dict[str, str]:
+        return self.graph.import_aliases.get(module, {})
+
+    # ------------------------------------------------------------------ S1
+    def run_s1(self) -> None:
+        for fn in self._repro_functions():
+            if fn.name == MODULE_FN:
+                continue
+            self._s1_function(fn)
+
+    def _ancestor_key_origin(self, fn: FunctionInfo, name: str,
+                             ) -> Optional[str]:
+        cur: Optional[FunctionInfo] = fn
+        while cur is not None:
+            origin = cur.key_origins.get(name)
+            if origin is not None:
+                return origin
+            cur = self.graph.functions.get(cur.parent) \
+                if cur.parent is not None else None
+        return None
+
+    def _s1_function(self, fn: FunctionInfo) -> None:
+        aliases = self._aliases(fn.module)
+        traced = fn.qualname in self.graph.traced
+        # env: var -> {"samples": int, "folds": set of const reprs}
+        env: Dict[str, Dict[str, object]] = {}
+        flagged: Set[str] = set()
+
+        def handle_call(call: ast.Call, in_loop: bool) -> None:
+            dotted = _dotted(call.func, aliases)
+            if dotted is None:
+                return
+            tail = dotted.split(".")[-1]
+            is_random = dotted.startswith("jax.random.")
+            if tail == "PRNGKey" or (is_random and tail == "key"):
+                if traced:
+                    self.emit(
+                        "S1", fn.qualname, f"prngkey:{tail}",
+                        f"{fn.qualname}: PRNGKey construction inside traced "
+                        "code — keys must be built on the host and folded "
+                        "per (seed, t, sync_round), or the stream restarts "
+                        "on every trace",
+                        fn.file, call.lineno)
+                return
+            if not is_random or not call.args:
+                return
+            arg0 = call.args[0]
+            if not isinstance(arg0, ast.Name):
+                return
+            var = arg0.id
+            st = env.setdefault(var, {"samples": 0, "folds": set()})
+            if tail == "fold_in":
+                operand = call.args[1] if len(call.args) > 1 else None
+                if isinstance(operand, ast.Constant):
+                    rep = repr(operand.value)
+                    folds = st["folds"]
+                    assert isinstance(folds, set)
+                    if rep in folds and f"fold:{var}" not in flagged:
+                        flagged.add(f"fold:{var}")
+                        self.emit(
+                            "S1", fn.qualname, f"dupfold:{var}:{rep}",
+                            f"{fn.qualname}: fold_in({var}, {rep}) applied "
+                            "twice — the two derived streams are identical",
+                            fn.file, call.lineno)
+                    folds.add(rep)
+                elif operand is not None and traced:
+                    origin = self._ancestor_key_origin(fn, var)
+                    if origin == "prngkey" and f"dom:{var}" not in flagged:
+                        flagged.add(f"dom:{var}")
+                        self.emit(
+                            "S1", fn.qualname, f"undomained:{var}",
+                            f"{fn.qualname}: fold_in({var}, <data>) where "
+                            f"{var} is a raw PRNGKey — tag the key with a "
+                            "constant stream id first or it collides with "
+                            "every other stream folded from the same seed",
+                            fn.file, call.lineno)
+                return
+            if tail in _SAMPLERS_EXEMPT:
+                return
+            # a sampler draw consumes the key
+            st["samples"] = int(st["samples"]) + (2 if in_loop else 1)
+            if int(st["samples"]) >= 2 and f"reuse:{var}" not in flagged:
+                flagged.add(f"reuse:{var}")
+                why = ("sampled inside a loop without rebinding"
+                       if in_loop else "sampled by >=2 jax.random draws "
+                       "without an intervening split/fold_in rebind")
+                self.emit(
+                    "S1", fn.qualname, f"reuse:{var}",
+                    f"{fn.qualname}: key '{var}' {why} — correlated draws",
+                    fn.file, call.lineno)
+
+        def rebind(stmt: ast.stmt) -> None:
+            targets: List[ast.expr] = []
+            if isinstance(stmt, ast.Assign):
+                targets = list(stmt.targets)
+            elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+                targets = [stmt.target]
+            for t in targets:
+                elts = t.elts if isinstance(t, ast.Tuple) else [t]
+                for e in elts:
+                    if isinstance(e, ast.Name):
+                        env.pop(e.id, None)
+
+        def walk(stmts: Sequence[ast.stmt], in_loop: bool) -> None:
+            for stmt in stmts:
+                if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef)):
+                    continue  # nested defs are linted as their own functions
+                for call in _stmt_calls(stmt):
+                    handle_call(call, in_loop)
+                rebind(stmt)
+                if isinstance(stmt, ast.If):
+                    # fork per branch so alternatives don't see each other's
+                    # folds/draws
+                    snap = {k: {"samples": v["samples"],
+                                "folds": set(v["folds"])}  # type: ignore
+                            for k, v in env.items()}
+                    walk(stmt.body, in_loop)
+                    after_body = env.copy()
+                    env.clear()
+                    env.update(snap)
+                    walk(stmt.orelse, in_loop)
+                    for k, v in after_body.items():
+                        cur = env.setdefault(
+                            k, {"samples": 0, "folds": set()})
+                        cur["samples"] = max(int(cur["samples"]),
+                                             int(v["samples"]))
+                        cur["folds"] = set(cur["folds"]) | set(v["folds"])  # type: ignore
+                elif isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+                    walk(stmt.body, True)
+                    walk(stmt.orelse, in_loop)
+                else:
+                    for sub in _nested_blocks(stmt):
+                        walk(sub, in_loop)
+
+        walk(_fn_body(fn), in_loop=False)
+
+    # ------------------------------------------------------------------ S2
+    def run_s2(self) -> None:
+        tainted = self._seed_taint()
+        free_taint: Dict[str, Set[str]] = {}
+        targets = [fn for fn in self._repro_functions()
+                   if fn.qualname in self.graph.traced
+                   and fn.name != MODULE_FN]
+        for _ in range(25):
+            changed = False
+            for fn in targets:
+                tv = self._intra_taint(
+                    fn, tainted.get(fn.qualname, set()),
+                    free_taint.get(fn.qualname, set()), emit=False)
+                changed |= self._propagate_taint(fn, tv, tainted)
+                for child in self.graph.functions.values():
+                    if child.parent != fn.qualname:
+                        continue
+                    hit = _free_names(child) & tv
+                    cur = free_taint.setdefault(child.qualname, set())
+                    if not hit.issubset(cur):
+                        cur.update(hit)
+                        changed = True
+            if not changed:
+                break
+        for fn in targets:
+            self._intra_taint(fn, tainted.get(fn.qualname, set()),
+                              free_taint.get(fn.qualname, set()), emit=True)
+
+    def _seed_taint(self) -> Dict[str, Set[str]]:
+        tainted: Dict[str, Set[str]] = {}
+        seen_sites: Set[str] = set()
+        for site in self.graph.wrapper_sites:
+            static = self._static_params(site)
+            for ref in site.targets:
+                for qual in self.graph.resolve_ref(ref):
+                    seen_sites.add(qual)
+                    fn = self.graph.functions.get(qual)
+                    if fn is None:
+                        continue
+                    tainted.setdefault(qual, set()).update(
+                        p for p in fn.params
+                        if p != "self" and p not in static)
+        # decorator-marked entries with no call-site record
+        for qual in self.graph.traced_entries:
+            if qual in seen_sites:
+                continue
+            fn = self.graph.functions.get(qual)
+            if fn is None:
+                continue
+            tainted.setdefault(qual, set()).update(
+                p for p in fn.params if p != "self")
+        return tainted
+
+    def _static_params(self, site: WrapperSite) -> Set[str]:
+        static: Set[str] = set()
+        names_kw = site.keywords.get("static_argnames")
+        if names_kw is not None:
+            static.update(_const_str_set(names_kw))
+        nums_kw = site.keywords.get("static_argnums")
+        if nums_kw is not None:
+            idxs = _const_int_set(nums_kw)
+            for ref in site.targets:
+                for qual in self.graph.resolve_ref(ref):
+                    fn = self.graph.functions.get(qual)
+                    if fn is None:
+                        continue
+                    params = [p for p in fn.params if p != "self"]
+                    for i in idxs:
+                        if 0 <= i < len(params):
+                            static.add(params[i])
+        return static
+
+    def _propagate_taint(self, fn: FunctionInfo, tv: Set[str],
+                         tainted: Dict[str, Set[str]]) -> bool:
+        changed = False
+
+        def arg_tainted(expr: ast.expr) -> bool:
+            return self._expr_tainted(expr, tv)
+
+        for cs in fn.calls:
+            if cs.node is None:
+                continue
+            callees = self.graph.site_callees(cs)
+            if not callees:
+                continue
+            recv_tainted = isinstance(cs.node.func, ast.Attribute) \
+                and arg_tainted(cs.node.func.value)
+            for qual in callees:
+                callee = self.graph.functions.get(qual)
+                if callee is None:
+                    continue
+                params = list(callee.params)
+                shift = 1 if params[:1] == ["self"] else 0
+                marks: Set[str] = set()
+                if recv_tainted and shift:
+                    marks.add("self")
+                for i, arg in enumerate(cs.node.args):
+                    if isinstance(arg, ast.Starred):
+                        continue
+                    if arg_tainted(arg) and i + shift < len(params):
+                        marks.add(params[i + shift])
+                for kw in cs.node.keywords:
+                    if kw.arg is not None and kw.arg in params \
+                            and arg_tainted(kw.value):
+                        marks.add(kw.arg)
+                if marks:
+                    cur = tainted.setdefault(qual, set())
+                    if not marks.issubset(cur):
+                        cur.update(marks)
+                        changed = True
+        return changed
+
+    def _expr_tainted(self, expr: ast.expr, tv: Set[str]) -> bool:
+        if isinstance(expr, ast.Name):
+            return expr.id in tv
+        if isinstance(expr, ast.Constant):
+            return False
+        if isinstance(expr, ast.Compare):
+            # `x is None` / `x is not None` resolves pytree STRUCTURE, not
+            # values — standard jax practice; same for string-key membership
+            # in a dict of traced leaves ('moe' in block_params)
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in expr.ops):
+                return False
+            if all(isinstance(op, (ast.In, ast.NotIn)) for op in expr.ops) \
+                    and isinstance(expr.left, ast.Constant) \
+                    and isinstance(expr.left.value, str):
+                return False
+        if isinstance(expr, ast.Attribute):
+            if expr.attr in _SHAPE_ATTRS:
+                return False
+            return self._expr_tainted(expr.value, tv)
+        if isinstance(expr, ast.Call):
+            parts = _flatten_attr(expr.func)
+            if parts is not None and parts[-1] in _UNTAINTED_CALLS:
+                return False
+            if parts is not None and parts[-1] in _SHAPE_ATTRS:
+                return False
+            if isinstance(expr.func, ast.Attribute) \
+                    and self._expr_tainted(expr.func.value, tv):
+                return True
+            return any(self._expr_tainted(a, tv) for a in expr.args
+                       if not isinstance(a, ast.Starred)) \
+                or any(self._expr_tainted(kw.value, tv)
+                       for kw in expr.keywords)
+        if isinstance(expr, ast.Lambda):
+            return False
+        tainted = False
+        for sub in ast.iter_child_nodes(expr):
+            if isinstance(sub, ast.expr):
+                tainted = tainted or self._expr_tainted(sub, tv)
+        return tainted
+
+    def _intra_taint(self, fn: FunctionInfo, seed: Set[str],
+                     free: Set[str], emit: bool) -> Set[str]:
+        aliases = self._aliases(fn.module)
+        body = _fn_body(fn)
+        local_bound = set(fn.params) | _assigned_names(body)
+        tv: Set[str] = set(seed) | set(free)
+        flagged: Set[str] = set()
+
+        def tainted(e: ast.expr) -> bool:
+            return self._expr_tainted(e, tv)
+
+        def token_root(e: ast.expr) -> str:
+            # stable fingerprint component: the root NAME of the offending
+            # expression, never a line number (baselines must survive drift)
+            while True:
+                if isinstance(e, (ast.Attribute, ast.Subscript)):
+                    e = e.value
+                elif isinstance(e, ast.Call) and isinstance(e.func,
+                                                            ast.Attribute):
+                    e = e.func.value
+                elif isinstance(e, (ast.Compare, ast.BinOp)):
+                    e = e.left
+                elif isinstance(e, ast.UnaryOp):
+                    e = e.operand
+                else:
+                    break
+            return e.id if isinstance(e, ast.Name) else "expr"
+
+        def flag(token: str, message: str, lineno: int) -> None:
+            if not emit or token in flagged:
+                return
+            flagged.add(token)
+            self.emit("S2", fn.qualname, token,
+                      f"{fn.qualname}: {message}", fn.file, lineno)
+
+        def check_calls(stmt: ast.stmt) -> None:
+            for call in _stmt_calls(stmt):
+                dotted = _dotted(call.func, aliases) or ""
+                tail = dotted.split(".")[-1]
+                if dotted == "print":
+                    flag("print", "print() inside traced code — runs at "
+                         "trace time only; use jax.debug.print",
+                         call.lineno)
+                elif dotted in ("float", "int", "bool") and call.args \
+                        and tainted(call.args[0]):
+                    flag(f"cast:{dotted}:{token_root(call.args[0])}",
+                         f"{dotted}() on a traced value forces host "
+                         "concretization (TracerConversionError under jit)",
+                         call.lineno)
+                elif isinstance(call.func, ast.Attribute) \
+                        and call.func.attr in ("item", "tolist",
+                                               "block_until_ready") \
+                        and tainted(call.func.value):
+                    # matched on the raw attribute, not `dotted`: the
+                    # receiver may itself be a call chain (x.sum().item())
+                    flag(f"host:{call.func.attr}:"
+                         f"{token_root(call.func.value)}",
+                         f".{call.func.attr}() on a traced value inside "
+                         "traced code",
+                         call.lineno)
+                elif dotted.startswith("numpy."):
+                    bad = [a for a in call.args
+                           if not isinstance(a, ast.Starred) and tainted(a)]
+                    if bad:
+                        flag(f"np:{tail}:{token_root(bad[0])}",
+                             f"np.{tail}(...) on a traced value — numpy "
+                             "concretizes tracers; use jnp",
+                             call.lineno)
+
+        def walk(stmts: Sequence[ast.stmt]) -> None:
+            for stmt in stmts:
+                if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef)):
+                    continue
+                check_calls(stmt)
+                if isinstance(stmt, (ast.If, ast.While)) \
+                        and tainted(stmt.test):
+                    kind = "if" if isinstance(stmt, ast.If) else "while"
+                    flag(f"branch:{kind}:{token_root(stmt.test)}",
+                         f"Python `{kind}` on a traced value — branch is "
+                         "resolved at trace time; use lax.cond/lax.select",
+                         stmt.lineno)
+                if isinstance(stmt, (ast.Assign, ast.AugAssign,
+                                     ast.AnnAssign)):
+                    targets = stmt.targets if isinstance(stmt, ast.Assign) \
+                        else [stmt.target]
+                    value = stmt.value
+                    val_tainted = value is not None and tainted(value)
+                    for t in targets:
+                        if isinstance(t, (ast.Subscript, ast.Attribute)):
+                            root = t
+                            while isinstance(root,
+                                             (ast.Subscript, ast.Attribute)):
+                                root = root.value
+                            if isinstance(root, ast.Name) \
+                                    and root.id not in local_bound:
+                                flag(f"closure:{root.id}",
+                                     f"mutation of closed-over '{root.id}' "
+                                     "inside traced code — runs once per "
+                                     "trace, not per step",
+                                     stmt.lineno)
+                        elts = t.elts if isinstance(t, ast.Tuple) else [t]
+                        for e in elts:
+                            if not isinstance(e, ast.Name):
+                                continue
+                            aug = isinstance(stmt, ast.AugAssign)
+                            if val_tainted or (aug and e.id in tv):
+                                tv.add(e.id)
+                            elif not aug:
+                                tv.discard(e.id)
+                if isinstance(stmt, (ast.For, ast.AsyncFor)) \
+                        and tainted(stmt.iter):
+                    t = stmt.target
+                    for e in (t.elts if isinstance(t, ast.Tuple) else [t]):
+                        if isinstance(e, ast.Name):
+                            tv.add(e.id)
+                for sub in _nested_blocks(stmt):
+                    walk(sub)
+
+        walk(body)
+        return tv
+
+    # ------------------------------------------------------------------ S3
+    def run_s3(self) -> None:
+        for fn in self._repro_functions():
+            node = fn.node
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            a = node.args
+            defaults = list(a.defaults) + [d for d in a.kw_defaults
+                                           if d is not None]
+            for d in defaults:
+                if self._mutable_default(d):
+                    self.emit(
+                        "S3", fn.qualname, "mutable-default",
+                        f"{fn.qualname}: mutable default argument — shared "
+                        "across calls",
+                        fn.file, d.lineno)
+        for cls in self.graph.classes.values():
+            if not cls.module.startswith("repro.") or not cls.is_dataclass:
+                continue
+            for stmt in cls.node.body:
+                if isinstance(stmt, ast.AnnAssign) and stmt.value is not None \
+                        and self._mutable_default(stmt.value):
+                    tgt = stmt.target
+                    name = tgt.id if isinstance(tgt, ast.Name) else "?"
+                    self.emit(
+                        "S3", cls.qualname, f"field:{name}",
+                        f"{cls.qualname}.{name}: mutable dataclass field "
+                        "default — use dataclasses.field(default_factory=...)",
+                        cls.file, stmt.lineno)
+        for site in self.graph.wrapper_sites:
+            static = self._static_params(site)
+            if not static:
+                continue
+            for ref in site.targets:
+                for qual in self.graph.resolve_ref(ref):
+                    fn = self.graph.functions.get(qual)
+                    if fn is None or not isinstance(
+                            fn.node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                        continue
+                    for arg in (fn.node.args.posonlyargs + fn.node.args.args
+                                + fn.node.args.kwonlyargs):
+                        if arg.arg not in static or arg.annotation is None:
+                            continue
+                        ann = arg.annotation
+                        ann_parts = _flatten_attr(ann)
+                        if ann_parts is None:
+                            continue
+                        for cls in self.graph.classes.values():
+                            if cls.name != ann_parts[-1]:
+                                continue
+                            if cls.is_dataclass and not cls.frozen:
+                                self.emit(
+                                    "S3", qual, f"static:{arg.arg}",
+                                    f"{qual}: static arg '{arg.arg}' is a "
+                                    f"non-frozen dataclass {cls.name} — "
+                                    "unhashable at the jit boundary; freeze "
+                                    "it",
+                                    fn.file, site.lineno)
+                            break
+
+    def _mutable_default(self, node: ast.expr) -> bool:
+        if isinstance(node, (ast.List, ast.Dict, ast.Set)):
+            return True
+        if isinstance(node, ast.Call):
+            parts = _flatten_attr(node.func)
+            return parts is not None and parts[-1] in _MUTABLE_FACTORIES \
+                and parts[-1] not in ("list", "dict", "set") \
+                or (parts is not None
+                    and parts[-1] in ("list", "dict", "set")
+                    and not node.args)
+        return False
+
+    # ------------------------------------------------------------------ S4
+    def run_s4(self) -> None:
+        for site in self.graph.wrapper_sites:
+            if site.wrapper != "jax.jit":
+                continue
+            donate = site.keywords.get("donate_argnums")
+            if donate is None:
+                continue
+            idxs = _const_int_set(donate)
+            if not idxs:
+                continue
+            for ref in site.targets:
+                for qual in self.graph.resolve_ref(ref):
+                    fn = self.graph.functions.get(qual)
+                    if fn is None or fn.has_vararg:
+                        continue
+                    params = [p for p in fn.params if p != "self"]
+                    returns = self._returns_value(fn)
+                    for i in sorted(idxs):
+                        if i >= len(params):
+                            self.emit(
+                                "S4", qual, f"range:{i}",
+                                f"{qual}: donate_argnums={i} is out of "
+                                f"range for {len(params)} parameter(s)",
+                                site.file, site.lineno)
+                            continue
+                        if not returns:
+                            self.emit(
+                                "S4", qual, f"noreturn:{i}",
+                                f"{qual}: donates '{params[i]}' but returns "
+                                "nothing — the donated buffer has no "
+                                "successor to reuse it",
+                                site.file, site.lineno)
+                            continue
+                        if not self._param_used(fn, params[i]):
+                            self.emit(
+                                "S4", qual, f"unused:{params[i]}",
+                                f"{qual}: donates '{params[i]}' which the "
+                                "body never reads — donation is dead",
+                                site.file, site.lineno, severity="warning")
+
+    def _returns_value(self, fn: FunctionInfo) -> bool:
+        if isinstance(fn.node, ast.Lambda):
+            return True
+        for stmt in _fn_body(fn):
+            for node in ast.walk(stmt):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.Lambda)):
+                    continue
+                if isinstance(node, ast.Return) and node.value is not None:
+                    return True
+        return False
+
+    def _param_used(self, fn: FunctionInfo, param: str) -> bool:
+        for stmt in _fn_body(fn):
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Name) and node.id == param \
+                        and isinstance(node.ctx, ast.Load):
+                    return True
+        return False
+
+    # ------------------------------------------------------------------ S5
+    def run_s5(self, readme_text: Optional[str],
+               rule_ids: Sequence[str]) -> None:
+        if readme_text is None:
+            return
+        for module, (path, _src) in sorted(self.sources.items()):
+            if not module.startswith("repro.launch."):
+                continue
+            pseudo = self.graph.functions.get(f"{module}.{MODULE_FN}")
+            if pseudo is None:
+                continue
+            for qual, fn in sorted(self.graph.functions.items()):
+                if fn.module != module:
+                    continue
+                for cs in fn.calls:
+                    if cs.callee.split(".")[-1] != "add_argument" \
+                            or cs.node is None or not cs.node.args:
+                        continue
+                    arg0 = cs.node.args[0]
+                    if not isinstance(arg0, ast.Constant) \
+                            or not isinstance(arg0.value, str) \
+                            or not arg0.value.startswith("--"):
+                        continue
+                    flag_name = arg0.value
+                    if flag_name not in readme_text:
+                        self.emit(
+                            "S5", qual, f"flag:{flag_name}",
+                            f"CLI flag {flag_name} ({module}) is not "
+                            "documented in README.md",
+                            fn.file, cs.lineno)
+        doc_ids = set(re.findall(r"^\|\s*(R\d+|S\d+)\s*\|", readme_text,
+                                 flags=re.MULTILINE))
+        for rid in rule_ids:
+            if rid not in doc_ids:
+                self.emit(
+                    "S5", "README.md", f"rule-missing:{rid}",
+                    f"rule {rid} is in the rules.py catalog but has no row "
+                    "in the README rule table",
+                    "README.md", 1)
+        for rid in sorted(doc_ids):
+            if rid not in rule_ids:
+                self.emit(
+                    "S5", "README.md", f"rule-stale:{rid}",
+                    f"README rule table documents {rid} which is not in "
+                    "the rules.py catalog",
+                    "README.md", 1)
+
+    # ------------------------------------------------------------------ S6
+    def run_s6(self) -> None:
+        for module, (path, _src) in sorted(self.sources.items()):
+            if not module.startswith("repro."):
+                continue
+            tree_fn = self.graph.functions.get(f"{module}.{MODULE_FN}")
+            if tree_fn is None or not isinstance(tree_fn.node, ast.Module):
+                continue
+            for stmt in tree_fn.node.body:
+                if not isinstance(stmt, ast.Assign) \
+                        or len(stmt.targets) != 1 \
+                        or not isinstance(stmt.targets[0], ast.Name) \
+                        or not isinstance(stmt.value, ast.Dict):
+                    continue
+                reg_name = stmt.targets[0].id
+                entries = self._registry_entries(stmt.value)
+                if entries is None or len(entries) < 3:
+                    continue
+                if self._registry_enumerated(module, reg_name,
+                                             tree_fn.node):
+                    continue
+                for key, value_name, lineno in entries:
+                    if self._seam_alive(module, key, value_name):
+                        continue
+                    self.emit(
+                        "S6", f"{module}.{reg_name}", f"seam:{key}",
+                        f"registry {module}.{reg_name}[{key!r}] -> "
+                        f"{value_name}: no entry point, bench, or test "
+                        "reaches this seam",
+                        path, lineno, severity="warning")
+
+    def _registry_entries(
+            self, node: ast.Dict,
+    ) -> Optional[List[Tuple[str, str, int]]]:
+        out: List[Tuple[str, str, int]] = []
+        for k, v in zip(node.keys, node.values, strict=True):
+            if not isinstance(k, ast.Constant) or not isinstance(k.value, str):
+                return None
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                out.append((k.value, v.value, k.lineno))
+            else:
+                parts = _flatten_attr(v)
+                if parts is None:
+                    return None
+                out.append((k.value, parts[-1], k.lineno))
+        return out
+
+    def _registry_enumerated(self, module: str, reg_name: str,
+                             tree: ast.Module) -> bool:
+        """True when the registry (or a module-level name derived from it,
+        like ``ARCH_IDS = tuple(_MODULES)``) is referenced from another
+        module — enumeration reaches every entry."""
+        aliases = {reg_name}
+        for stmt in tree.body:
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name):
+                mentioned = {n.id for n in ast.walk(stmt.value)
+                             if isinstance(n, ast.Name)}
+                if mentioned & aliases:
+                    aliases.add(stmt.targets[0].id)
+        for other, refs in self.graph.module_refs.items():
+            if other == module:
+                continue
+            if refs & aliases:
+                return True
+        return False
+
+    def _seam_alive(self, module: str, key: str, value_name: str) -> bool:
+        for other, refs in self.graph.module_refs.items():
+            if other == module:
+                continue
+            if key in refs or value_name in refs:
+                return True
+        # call-graph reachability of the target class/function
+        for cls in self.graph.classes.values():
+            if cls.name == value_name and cls.module == module:
+                for mq in cls.methods.values():
+                    if mq in self.graph.reachable:
+                        return True
+        qual = f"{module}.{value_name}"
+        return qual in self.graph.reachable
+
+
+def audit_sources(sources: Dict[str, Tuple[str, str]],
+                  readme_text: Optional[str] = None,
+                  rule_ids: Optional[Sequence[str]] = None,
+                  graph: Optional[CallGraph] = None) -> SourceAudit:
+    """Run S1-S6 over in-memory sources. ``rule_ids`` defaults to the full
+    rules.py catalog; pass explicitly in fixtures."""
+    if graph is None:
+        graph = build_callgraph(sources)
+    if rule_ids is None:
+        from repro.analysis.rules import RULES
+        rule_ids = tuple(RULES)
+    linter = _Linter(graph, sources)
+    linter.run_s1()
+    linter.run_s2()
+    linter.run_s3()
+    linter.run_s4()
+    linter.run_s5(readme_text, rule_ids)
+    linter.run_s6()
+    n_traced = sum(1 for q in graph.functions if q in graph.traced)
+    n_host = sum(1 for q in graph.functions if q in graph.host)
+    meta: Dict[str, object] = {
+        "modules": len(graph.modules),
+        "functions": len(graph.functions),
+        "classes": len(graph.classes),
+        "traced": n_traced,
+        "host": n_host,
+        "both": sum(1 for q in graph.functions
+                    if q in graph.traced and q in graph.host),
+        "wrapper_sites": len(graph.wrapper_sites),
+    }
+    return SourceAudit(findings=linter.findings, graph=graph, meta=meta)
+
+
+def audit_repo(root: str,
+               baseline_path: Optional[str] = None) -> SourceAudit:
+    """Repo-level S1-S6 audit rooted at ``root`` (README.md read for S5,
+    baseline applied when ``baseline_path`` exists)."""
+    sources = repo_sources(root)
+    readme = None
+    readme_path = os.path.join(root, "README.md")
+    if os.path.exists(readme_path):
+        with open(readme_path, "r") as f:
+            readme = f.read()
+    audit = audit_sources(sources, readme_text=readme)
+    if baseline_path is not None:
+        baseline = load_baseline(baseline_path)
+        matched = apply_baseline(audit, baseline)
+        audit.meta["baseline"] = {
+            "path": os.path.relpath(baseline_path, root),
+            "entries": len(baseline),
+            "matched": matched,
+        }
+    return audit

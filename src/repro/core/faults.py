@@ -64,6 +64,11 @@ import jax.numpy as jnp
 
 _LINK_STREAM = 0       # fold_in tags: one substream per fault kind so the
 _STRAGGLER_STREAM = 1  # link and straggler draws never collide
+COMPRESS_STREAM = 2    # reserved for the stochastic-compressor draw in
+#                        dist/sparq_dist.py — tagging that stream here keeps
+#                        the whole (seed, stream, counter) namespace in one
+#                        place, so a same-seed FaultPlan and compressor can
+#                        never fold to the same key.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +100,12 @@ class FaultPlan:
     straggler_frac: float = 0.0                 # per-step skip probability
     dropout: Tuple[DropoutWindow, ...] = ()     # offline windows (step units)
     seed: int = 0                               # fault-stream PRNG seed
+    # Host-prebuilt per-stream base keys (set in __post_init__); excluded
+    # from eq/hash so the plan still keys jit caches by its config alone.
+    _link_base: jax.Array = dataclasses.field(
+        init=False, repr=False, compare=False)
+    _straggler_base: jax.Array = dataclasses.field(
+        init=False, repr=False, compare=False)
 
     def __post_init__(self):
         if not 0.0 <= self.link_drop < 1.0:
@@ -116,6 +127,16 @@ class FaultPlan:
             self, "dropout",
             tuple(w if isinstance(w, DropoutWindow) else DropoutWindow(*w)
                   for w in self.dropout))
+        # Per-stream base keys are built ONCE here, on the host, so the
+        # traced mask draws below never touch jax.random.PRNGKey (raw-seed
+        # key construction inside traced code is an S1 lineage violation).
+        # fold_in(fold_in(PRNGKey(seed), stream), counter) is composed
+        # identically, so the fault stream is bit-for-bit unchanged.
+        base = jax.random.PRNGKey(self.seed)
+        object.__setattr__(self, "_link_base",
+                           jax.random.fold_in(base, _LINK_STREAM))
+        object.__setattr__(self, "_straggler_base",
+                           jax.random.fold_in(base, _STRAGGLER_STREAM))
 
     @property
     def is_null(self) -> bool:
@@ -140,10 +161,10 @@ class FaultPlan:
     # All jit-traceable in (t, sync_round); n is static. Each mask is a pure
     # function of (seed, counter, n), which is the whole determinism contract.
 
-    def _key(self, stream: int, counter: jax.Array) -> jax.Array:
-        return jax.random.fold_in(
-            jax.random.fold_in(jax.random.PRNGKey(self.seed), stream),
-            counter)
+    def _key(self, base: jax.Array, counter: jax.Array) -> jax.Array:
+        # ``base`` is one of the per-stream keys prebuilt in __post_init__;
+        # only the counter fold happens under trace.
+        return jax.random.fold_in(base, counter)
 
     def live_mask(self, t: jax.Array, n: int) -> jax.Array:
         """(n,) bool: node is up (outside every dropout window) at step t."""
@@ -158,7 +179,7 @@ class FaultPlan:
         (not offline, and not a straggler skipping this step)."""
         active = self.live_mask(t, n)
         if self.stragglers and self.straggler_frac > 0.0:
-            u = jax.random.uniform(self._key(_STRAGGLER_STREAM, t), (n,))
+            u = jax.random.uniform(self._key(self._straggler_base, t), (n,))
             is_straggler = jnp.zeros((n,), bool).at[
                 jnp.asarray(self.stragglers)].set(True)
             active = active & ~(is_straggler & (u < self.straggler_frac))
@@ -169,7 +190,8 @@ class FaultPlan:
         each undirected edge survives independently w.p. 1 - link_drop."""
         if self.link_drop == 0.0:
             return jnp.ones((n, n), jnp.float32)
-        u = jax.random.uniform(self._key(_LINK_STREAM, sync_round), (n, n))
+        u = jax.random.uniform(self._key(self._link_base, sync_round),
+                               (n, n))
         keep = jnp.triu(u >= self.link_drop, k=1)
         return (keep | keep.T).astype(jnp.float32)
 

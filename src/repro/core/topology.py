@@ -25,7 +25,7 @@ support).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Iterator, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -59,6 +59,20 @@ def complete_adjacency(n: int) -> np.ndarray:
     return np.ones((n, n)) - np.eye(n)
 
 
+def matching_pairs(order: np.ndarray) -> Iterator[Tuple[np.intp, np.intp]]:
+    """Pair up a permuted node order into a perfect matching:
+    ``(order[0], order[1]), (order[2], order[3]), ...``. The two
+    matching-based constructions below (`_try_regular`'s odd-degree factor
+    and `GossipPlan.matchings`) MUST share this pairing rule — each call
+    site draws its own ``rng.permutation`` so the per-seed RNG streams
+    stay bit-identical with the pre-refactor code.
+
+    strict=False is the invariant here, not an oversight: for odd ``len``
+    the trailing unpaired node deliberately drops (callers validate
+    evenness where a full matching is required)."""
+    return zip(order[0::2], order[1::2], strict=False)
+
+
 def _try_regular(n: int, deg: int,
                  rng: np.random.Generator) -> Optional[np.ndarray]:
     """One rejection-sampling attempt at a deg-regular simple graph:
@@ -77,8 +91,7 @@ def _try_regular(n: int, deg: int,
                 return None
             a[u, v] = a[v, u] = 1
     if deg % 2 == 1:
-        order = rng.permutation(n)
-        for i, j in zip(order[0::2], order[1::2], strict=False):
+        for i, j in matching_pairs(rng.permutation(n)):
             if a[i, j]:
                 return None
             a[i, j] = a[j, i] = 1
@@ -355,9 +368,8 @@ class GossipPlan:
         rng = np.random.default_rng(seed)
         ws = []
         for _ in range(rounds):
-            order = rng.permutation(n)
             w = np.eye(n)
-            for i, j in zip(order[0::2], order[1::2], strict=False):
+            for i, j in matching_pairs(rng.permutation(n)):
                 w[i, i] = w[j, j] = 0.5
                 w[i, j] = w[j, i] = 0.5
             ws.append(w)

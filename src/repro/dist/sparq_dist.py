@@ -52,7 +52,7 @@ import jax.numpy as jnp
 from repro.core import bits as bits_mod
 from repro.core.compression import (Compressor, TopFrac, compress_tree,
                                     tree_payload_bits)
-from repro.core.faults import FaultPlan, resolve_faults
+from repro.core.faults import COMPRESS_STREAM, FaultPlan, resolve_faults
 from repro.core.schedule import LRSchedule, decaying
 from repro.core.sparq import gossip_mix, sync_message_bits, trigger_mask
 from repro.core.topology import GossipPlan, Topology, circulant_row, make_plan
@@ -250,7 +250,12 @@ def build_sparq(cfg, mesh, dcfg: DistSparqConfig
     shift_terms = ([(s, float(shift_row[s])) for s in range(1, n)
                     if shift_row[s] > 0.0]
                    if shift_row is not None else None)
-    base_key = jax.random.PRNGKey(dcfg.seed)
+    # Domain-tag the compressor stream with the reserved COMPRESS_STREAM
+    # fold (core/faults.py owns the stream namespace): a raw PRNGKey(seed)
+    # folded directly with t would collide with a same-seed FaultPlan's
+    # fold_in(PRNGKey(seed), stream in {0, 1}) draws whenever t is small.
+    base_key = jax.random.fold_in(jax.random.PRNGKey(dcfg.seed),
+                                  COMPRESS_STREAM)
 
     pshape = jax.eval_shape(lambda k: init_params(cfg, k),
                             jax.random.PRNGKey(0))

@@ -16,7 +16,7 @@ import json
 import sys
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -90,7 +90,7 @@ def analyse(compiled, n_chips: int, cfg: ModelConfig, shape: InputShape,
     collective_s = coll_total / ICI_BW
     terms = {"compute_s": compute_s, "memory_s": memory_s,
              "collective_s": collective_s}
-    dominant = max(terms, key=terms.get)
+    dominant = max(terms, key=lambda k: terms[k])
     mf = model_flops(cfg, shape)
     mem = compiled.memory_analysis()
     mem_d = {
@@ -115,7 +115,8 @@ def analyse(compiled, n_chips: int, cfg: ModelConfig, shape: InputShape,
     }
 
 
-def make_batch_sds(cfg: ModelConfig, shape: InputShape, n_nodes: int):
+def make_batch_sds(cfg: ModelConfig, shape: InputShape,
+                   n_nodes: int) -> Dict[str, jax.ShapeDtypeStruct]:
     per_node = shape.global_batch // n_nodes
     use_embeds = cfg.family in ("audio", "vlm")
     b = {"labels": jax.ShapeDtypeStruct((n_nodes, per_node, shape.seq_len),
@@ -279,7 +280,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                 "traceback": traceback.format_exc()[-2000:]}
 
 
-def main(argv=None):
+def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="all")
     ap.add_argument("--shape", default="all")

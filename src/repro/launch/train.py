@@ -22,7 +22,7 @@ import os
 import sys
 
 
-def _parse():
+def _parse() -> argparse.Namespace:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b")
     ap.add_argument("--steps", type=int, default=40)
@@ -95,7 +95,7 @@ def _parse():
     return ap.parse_args()
 
 
-def main():
+def main() -> int:
     args = _parse()
     if args.devices:
         os.environ["XLA_FLAGS"] = (

@@ -305,9 +305,10 @@ def test_render_report_document_shape():
     sup = default_suppressions("cpu")
     apply_suppressions(r.findings, sup)
     doc = render_report([r], sup, extra={"jax_version": jax.__version__})
-    assert doc["ok"] and doc["schema_version"] == 2
+    assert doc["ok"] and doc["schema_version"] == 3
     assert set(doc["rules"]) == {"R1", "R2", "R3", "R4", "R5",
-                                 "R6", "R7", "R8", "R9", "R10", "R11"}
+                                 "R6", "R7", "R8", "R9", "R10", "R11",
+                                 "S1", "S2", "S3", "S4", "S5", "S6"}
     assert doc["programs"][0]["counts"]["suppressed"] == 1
     assert doc["jax_version"] == jax.__version__
 

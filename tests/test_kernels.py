@@ -143,4 +143,6 @@ def test_xhat_update_closes_the_loop():
         q, xe, _ = ops.trigger_compress_update(x, xe, jnp.float32(0.0), 64)
         errs.append(float(jnp.linalg.norm(x - xe) / jnp.linalg.norm(x)))
     assert errs[-1] < 0.05
+    # strict=False is deliberate: consecutive-pairs idiom — errs[1:] is one
+    # shorter than errs by construction, the zip stops at the short side.
     assert all(b <= a + 1e-6 for a, b in zip(errs, errs[1:], strict=False))

@@ -1,0 +1,553 @@
+"""Every S-rule (analysis/source_lint.py) fires on an intentionally-broken
+fixture and stays silent on the clean twin, plus the baseline round-trip
+and the committed-repo gate.
+
+Fixture style matches tests/test_analysis.py: each test states its whole
+world inline — here as in-memory {module: (path, source)} dicts, the shape
+`repo_sources` produces.
+"""
+import textwrap
+
+from repro.analysis.source_lint import (apply_baseline, audit_repo,
+                                        audit_sources, fingerprint,
+                                        load_baseline, write_baseline)
+
+RULE_IDS = ("S1", "S2", "S3", "S4", "S5", "S6")
+
+
+def run(readme=None, **modules):
+    sources = {
+        f"repro.{name}": (f"src/repro/{name}.py", textwrap.dedent(src))
+        for name, src in modules.items()
+    }
+    return audit_sources(sources, readme_text=readme, rule_ids=RULE_IDS)
+
+
+def findings_of(audit, rule_id):
+    return [sf.finding for sf in audit.findings
+            if sf.finding.rule_id == rule_id]
+
+
+# ------------------------------------------------------------------ S1
+
+def test_s1_fires_on_key_reused_by_two_draws():
+    a = run(m="""
+        import jax
+
+        def draw(key):
+            a = jax.random.normal(key, (4,))
+            b = jax.random.uniform(key, (4,))
+            return a + b
+        """)
+    out = findings_of(a, "S1")
+    assert len(out) == 1 and out[0].severity == "error"
+    assert "key" in out[0].message
+
+
+def test_s1_clean_when_key_is_split():
+    a = run(m="""
+        import jax
+
+        def draw(key):
+            k1, k2 = jax.random.split(key)
+            return jax.random.normal(k1, (4,)) + jax.random.uniform(k2, (4,))
+        """)
+    assert findings_of(a, "S1") == []
+
+
+def test_s1_fires_on_duplicate_fold_in_constant():
+    a = run(m="""
+        import jax
+
+        def streams(key):
+            ka = jax.random.fold_in(key, 0)
+            kb = jax.random.fold_in(key, 0)
+            return ka, kb
+        """)
+    out = findings_of(a, "S1")
+    assert len(out) == 1 and "fold_in" in out[0].message
+
+
+def test_s1_clean_on_distinct_fold_in_constants():
+    a = run(m="""
+        import jax
+
+        def streams(key):
+            return jax.random.fold_in(key, 0), jax.random.fold_in(key, 1)
+        """)
+    assert findings_of(a, "S1") == []
+
+
+def test_s1_fires_on_prngkey_inside_traced_code():
+    a = run(m="""
+        import jax
+
+        def step(x, t):
+            key = jax.random.PRNGKey(0)
+            return x + jax.random.normal(key, x.shape)
+
+        def main():
+            jax.jit(step)(1.0, 2)
+        """)
+    out = findings_of(a, "S1")
+    assert any("PRNGKey" in f.message for f in out)
+
+
+def test_s1_clean_for_prngkey_on_the_host():
+    a = run(m="""
+        import jax
+
+        def step(x, key):
+            return x + jax.random.normal(key, x.shape)
+
+        def main():
+            key = jax.random.PRNGKey(0)
+            jax.jit(step)(1.0, key)
+        """)
+    assert findings_of(a, "S1") == []
+
+
+def test_s1_fires_on_undomained_fold_of_raw_key_in_traced_code():
+    # the exact sparq_dist bug this PR fixes: fold_in(PRNGKey(seed), t)
+    # collides with any same-seed stream folding small constants
+    a = run(m="""
+        import jax
+
+        def make(seed):
+            base = jax.random.PRNGKey(seed)
+
+            def step(x, t):
+                k = jax.random.fold_in(base, t)
+                return x + jax.random.normal(k, x.shape)
+
+            return jax.jit(step)
+        """)
+    out = findings_of(a, "S1")
+    assert len(out) == 1 and "fold_in" in out[0].message
+
+
+def test_s1_clean_when_base_key_is_domain_tagged():
+    a = run(m="""
+        import jax
+
+        def make(seed):
+            base = jax.random.fold_in(jax.random.PRNGKey(seed), 2)
+
+            def step(x, t):
+                k = jax.random.fold_in(base, t)
+                return x + jax.random.normal(k, x.shape)
+
+            return jax.jit(step)
+        """)
+    assert findings_of(a, "S1") == []
+
+
+# ------------------------------------------------------------------ S2
+
+def test_s2_fires_on_python_branch_over_traced_value():
+    a = run(m="""
+        import jax
+
+        def step(x):
+            if x > 0:
+                return x
+            return -x
+
+        def main():
+            jax.jit(step)(1.0)
+        """)
+    out = findings_of(a, "S2")
+    assert len(out) == 1 and out[0].severity == "error"
+
+
+def test_s2_clean_for_branch_on_shape_or_none():
+    a = run(m="""
+        import jax
+
+        def step(x, key=None):
+            if key is None:
+                key = x
+            if x.shape[0] > 2:
+                return x + key
+            return x
+
+        def main():
+            jax.jit(step)(1.0)
+        """)
+    assert findings_of(a, "S2") == []
+
+
+def test_s2_fires_on_float_and_item_escapes():
+    a = run(m="""
+        import jax
+
+        def step(x):
+            s = float(x)
+            return x * s + x.sum().item()
+
+        def main():
+            jax.jit(step)(1.0)
+        """)
+    out = findings_of(a, "S2")
+    assert len(out) == 2
+
+
+def test_s2_fires_on_numpy_over_traced_value():
+    a = run(m="""
+        import jax
+        import numpy as np
+
+        def step(x):
+            return np.abs(x)
+
+        def main():
+            jax.jit(step)(1.0)
+        """)
+    out = findings_of(a, "S2")
+    assert len(out) == 1 and "numpy" in out[0].message
+
+
+def test_s2_fires_on_print_and_closure_mutation_in_scan_body():
+    a = run(m="""
+        import jax
+
+        def main():
+            seen = []
+
+            def body(carry, x):
+                print(carry)
+                seen.append(1)
+                return carry + x, x
+
+            jax.lax.scan(body, 0.0, None, length=4)
+        """)
+    out = findings_of(a, "S2")
+    assert any("print" in f.message for f in out)
+
+
+def test_s2_silent_on_host_code_doing_all_of_it():
+    a = run(m="""
+        import numpy as np
+
+        def main():
+            x = np.ones(4)
+            if x.sum() > 0:
+                print(float(x[0]))
+        """)
+    assert findings_of(a, "S2") == []
+
+
+def test_s2_respects_static_argnames():
+    # a static arg is a Python value under trace: branching on it is fine
+    a = run(m="""
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("mode",))
+        def step(x, mode):
+            if mode == "fast":
+                return x
+            return x * 2
+        """)
+    assert findings_of(a, "S2") == []
+
+
+# ------------------------------------------------------------------ S3
+
+def test_s3_fires_on_mutable_signature_default():
+    a = run(m="""
+        def f(x, acc=[]):
+            acc.append(x)
+            return acc
+        """)
+    out = findings_of(a, "S3")
+    assert len(out) == 1 and out[0].severity == "error"
+
+
+def test_s3_fires_on_mutable_dataclass_field_default():
+    a = run(m="""
+        import dataclasses
+
+        @dataclasses.dataclass
+        class Cfg:
+            xs: list = []
+        """)
+    assert len(findings_of(a, "S3")) == 1
+
+
+def test_s3_fires_on_nonfrozen_dataclass_static_arg():
+    a = run(m="""
+        import dataclasses
+        import jax
+
+        @dataclasses.dataclass
+        class Cfg:
+            n: int = 4
+
+        def step(x, cfg: Cfg):
+            return x * cfg.n
+
+        def main():
+            jax.jit(step, static_argnums=(1,))(1.0, Cfg())
+        """)
+    out = findings_of(a, "S3")
+    assert len(out) == 1 and "frozen" in out[0].message
+
+
+def test_s3_clean_for_frozen_dataclass_static_arg():
+    a = run(m="""
+        import dataclasses
+        import jax
+
+        @dataclasses.dataclass(frozen=True)
+        class Cfg:
+            n: int = 4
+
+        def step(x, cfg: Cfg):
+            return x * cfg.n
+
+        def main():
+            jax.jit(step, static_argnums=(1,))(1.0, Cfg())
+        """)
+    assert findings_of(a, "S3") == []
+
+
+# ------------------------------------------------------------------ S4
+
+def test_s4_fires_on_out_of_range_donation():
+    a = run(m="""
+        import jax
+
+        def step(x):
+            return x + 1
+
+        def main():
+            jax.jit(step, donate_argnums=(1,))(1.0)
+        """)
+    out = findings_of(a, "S4")
+    assert len(out) == 1 and out[0].severity == "error"
+
+
+def test_s4_fires_when_donated_fn_returns_nothing():
+    a = run(m="""
+        import jax
+
+        def step(x):
+            x.block_until_ready()
+
+        def main():
+            jax.jit(step, donate_argnums=(0,))(1.0)
+        """)
+    assert any("return" in f.message for f in findings_of(a, "S4"))
+
+
+def test_s4_warns_on_donated_but_unused_param():
+    a = run(m="""
+        import jax
+
+        def step(x, scratch):
+            return x + 1
+
+        def main():
+            jax.jit(step, donate_argnums=(1,))(1.0, 2.0)
+        """)
+    out = findings_of(a, "S4")
+    assert len(out) == 1 and out[0].severity == "warning"
+
+
+def test_s4_clean_for_carry_style_donation():
+    a = run(m="""
+        import jax
+
+        def step(state, batch):
+            return state + batch
+
+        def main():
+            jax.jit(step, donate_argnums=(0,))(1.0, 2.0)
+        """)
+    assert findings_of(a, "S4") == []
+
+
+# ------------------------------------------------------------------ S5
+
+CLEAN_RULE_TABLE = "\n".join(f"| {rid} | name | contract |"
+                             for rid in RULE_IDS)
+
+
+def test_s5_fires_on_undocumented_cli_flag():
+    a = run(readme="docs mention --alpha only\n" + CLEAN_RULE_TABLE,
+            **{"launch.cli": """
+        import argparse
+
+        def main():
+            ap = argparse.ArgumentParser()
+            ap.add_argument("--alpha")
+            ap.add_argument("--beta")
+            ap.parse_args()
+        """})
+    out = findings_of(a, "S5")
+    assert len(out) == 1 and "--beta" in out[0].message
+
+
+def test_s5_fires_on_rule_table_drift():
+    stale = "\n".join(f"| {rid} | name | contract |"
+                      for rid in ("S1", "S2", "S9"))
+    a = run(readme=stale, m="""
+        def main():
+            pass
+        """)
+    msgs = " ".join(f.message for f in findings_of(a, "S5"))
+    assert "S9" in msgs          # documented but not in the catalog
+    assert "S3" in msgs          # in the catalog but undocumented
+
+
+def test_s5_clean_when_docs_match():
+    a = run(readme="use --alpha\n" + CLEAN_RULE_TABLE,
+            **{"launch.cli": """
+        import argparse
+
+        def main():
+            ap = argparse.ArgumentParser()
+            ap.add_argument("--alpha")
+            ap.parse_args()
+        """})
+    assert findings_of(a, "S5") == []
+
+
+# ------------------------------------------------------------------ S6
+
+def test_s6_warns_on_dead_registry_entry():
+    # registry dict kept module-private behind an accessor — the "dead"
+    # entry's key never appears outside its module and its value function
+    # is unreachable, so only it is flagged
+    a = run(
+        reg="""
+        def used_model():
+            return 1
+
+        def other_model():
+            return 2
+
+        def dead_model():
+            return 3
+
+        _REGISTRY = {"used": used_model, "other": other_model,
+                     "dead": dead_model}
+
+        def get(name):
+            return _REGISTRY[name]
+        """,
+        use="""
+        from repro.reg import get
+
+        def main():
+            return get("used")() + get("other")()
+        """)
+    out = findings_of(a, "S6")
+    assert len(out) == 1 and out[0].severity == "warning"
+    assert "dead" in out[0].message
+
+
+def test_s6_silent_when_registry_is_enumerated():
+    a = run(
+        reg="""
+        def a_model():
+            return 1
+
+        def b_model():
+            return 2
+
+        def c_model():
+            return 3
+
+        REGISTRY = {"a": a_model, "b": b_model, "c": c_model}
+        """,
+        use="""
+        from repro.reg import REGISTRY
+
+        def main():
+            return [f() for f in REGISTRY.values()]
+        """)
+    assert findings_of(a, "S6") == []
+
+
+# ------------------------------------------------------------ baseline
+
+def test_baseline_roundtrip_suppresses_grandfathered_error(tmp_path):
+    broken = """
+        import jax
+
+        def step(x):
+            return float(x)
+
+        def main():
+            jax.jit(step)(1.0)
+        """
+    path = str(tmp_path / "BASELINE.json")
+    first = run(m=broken)
+    assert [f.severity for f in findings_of(first, "S2")] == ["error"]
+    write_baseline(first, path)
+
+    again = run(m=broken)
+    hits = apply_baseline(again, load_baseline(path))
+    assert hits == 1
+    (f,) = findings_of(again, "S2")
+    assert f.suppressed and "baselined" in f.suppression_reason
+
+
+def test_baseline_preserves_curated_reasons(tmp_path):
+    path = str(tmp_path / "BASELINE.json")
+    audit = run(m="""
+        import jax
+
+        def step(x):
+            return float(x)
+
+        def main():
+            jax.jit(step)(1.0)
+        """)
+    fp = audit.findings[0].fingerprint
+    write_baseline(audit, path, reasons={fp: "deliberate: host metric"})
+    write_baseline(audit, path)  # regen without reasons must keep it
+    assert load_baseline(path)[fp] == "deliberate: host metric"
+
+
+def test_fingerprint_is_line_drift_stable():
+    # same defect at a different line number -> same fingerprint
+    v1 = run(m="""
+        import jax
+
+        def step(x):
+            return float(x)
+
+        def main():
+            jax.jit(step)(1.0)
+        """)
+    v2 = run(m="""
+        import jax
+
+        # a comment pushing everything down
+        # by several
+        # lines
+
+        def step(x):
+            return float(x)
+
+        def main():
+            jax.jit(step)(1.0)
+        """)
+    assert v1.findings[0].fingerprint == v2.findings[0].fingerprint
+    assert fingerprint("S2", "repro.m.step", "x") == "S2|repro.m.step|x"
+
+
+# ------------------------------------------------------------ repo gate
+
+def test_committed_repo_is_source_clean():
+    # the CI gate in miniature: the tree + committed baseline must carry
+    # zero unsuppressed errors
+    audit = audit_repo(".", baseline_path="results/SOURCE_BASELINE.json")
+    errors = [sf.finding for sf in audit.findings
+              if sf.finding.severity == "error"
+              and not sf.finding.suppressed]
+    assert errors == [], [f.message for f in errors]
+    assert audit.meta["traced"] > 100
