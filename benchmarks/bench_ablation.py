@@ -48,7 +48,7 @@ def run_bench(quick: bool = True) -> List[Dict]:
                           lr=lr, H=H)
         runner = engine.make_runner(make_step(cfg, grad_fn), T,
                                     record_every=rec, eval_fn=eval_fn)
-        st, trace, us = engine.timed_run(
+        st, trace, us, mem = engine.timed_run(
             runner, lambda: cfg.init_state(x0), key, T)
         # evaluate on the true step-T iterate (the last trace record sits at
         # (T//rec)*rec, which is < T when rec does not divide T)
@@ -58,6 +58,8 @@ def run_bench(quick: bool = True) -> List[Dict]:
                "bits": float(st.bits),
                "rounds": int(st.sync_rounds),
                "trigger_events": int(st.triggers),
+               "peak_hbm_bytes": mem["peak_hbm_bytes"] if mem else None,
+               "memory": mem,
                "trace": trace.to_dict()}
         row.update(contract_status(cfg, f * c, bits=row["bits"],
                                    sync_rounds=row["rounds"],

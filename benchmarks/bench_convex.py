@@ -52,13 +52,15 @@ def run_bench(quick: bool = True) -> List[Dict]:
     def record(name, cfg):
         runner = engine.make_runner(make_step(cfg, grad_fn), T,
                                     record_every=rec, eval_fn=eval_fn)
-        st, trace, us = engine.timed_run(
+        st, trace, us, mem = engine.timed_run(
             runner, lambda: cfg.init_state(x0), key, T)
         final = trace[-1]
         row = {
             "name": name, "us_per_call": round(us, 1),
             "final_loss": round(final[2], 4), "bits": final[1],
             "rounds": int(st.sync_rounds), "trigger_events": int(st.triggers),
+            "peak_hbm_bytes": mem["peak_hbm_bytes"] if mem else None,
+            "memory": mem,
             "trace": trace,
         }
         row.update(contract_status(cfg, d, bits=row["bits"],
@@ -85,13 +87,15 @@ def run_bench(quick: bool = True) -> List[Dict]:
     # vanilla decentralized SGD (32-bit exact gossip)
     vrunner = engine.make_runner(baselines.make_vanilla_step(topo, lr, grad_fn),
                                  T, record_every=rec, eval_fn=eval_fn)
-    vstate, vtrace, vus = engine.timed_run(
+    vstate, vtrace, vus, vmem = engine.timed_run(
         vrunner, lambda: baselines.init_vanilla(x0, n), key, T)
     results.append({"name": "vanilla_decentralized",
                     "us_per_call": round(vus, 1),
                     "final_loss": round(vtrace[-1][2], 4),
                     "bits": vtrace[-1][1], "rounds": T,
-                    "trigger_events": T * n, "trace": vtrace})
+                    "trigger_events": T * n,
+                    "peak_hbm_bytes": vmem["peak_hbm_bytes"] if vmem else None,
+                    "memory": vmem, "trace": vtrace})
 
     # bits-savings factor at the weakest method's achieved loss
     # (use the UNROUNDED trace losses; the displayed final_loss is rounded)

@@ -75,12 +75,14 @@ def run_bench(quick: bool = True) -> List[Dict]:
         """One row schema for every method — a schema change lands once."""
         runner = engine.make_runner(step_fn, T, record_every=rec,
                                     eval_fn=eval_fn)
-        st, trace, us = engine.timed_run(runner, init_state, key, T)
+        st, trace, us, mem = engine.timed_run(runner, init_state, key, T)
         row = {
             "name": name, "us_per_call": round(us, 1), "method": method,
             "final_loss": round(trace[-1][2], 4), "bits": trace[-1][1],
             "trigger_events": int(getattr(st, "triggers", T * n)),
             "sync_rounds": int(getattr(st, "sync_rounds", T)),
+            "peak_hbm_bytes": mem["peak_hbm_bytes"] if mem else None,
+            "memory": mem,
             **fault_cols(faults), "trace": trace, **extra}
         if cfg is not None:
             row.update(contract_status(cfg, d, bits=row["bits"],

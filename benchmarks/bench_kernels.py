@@ -9,6 +9,7 @@ from typing import Dict, List
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import compiled_memory_stats
 from repro.kernels import ops, ref
 from repro.kernels.qsgd import qsgd_blocks
 from repro.kernels.sign_topk import BLOCK, sign_topk_blocks
@@ -23,6 +24,12 @@ def _time(fn, *args, reps=20):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
+def _mem(fn, *args):
+    """peak-HBM watermark of the kernel's own AOT lowering (the per-row
+    memory column the P3 rule requires on every BENCH artifact)."""
+    return compiled_memory_stats(jax.jit(fn).lower(*args).compile())
+
+
 def run_bench(quick: bool = True) -> List[Dict]:
     rows = []
     nb = 64 if quick else 1024  # 64 KiB-ish to 1 MiB-ish shards
@@ -31,8 +38,9 @@ def run_bench(quick: bool = True) -> List[Dict]:
     xe = 0.5 * jax.random.normal(jax.random.fold_in(key, 1), (nb, BLOCK))
     k_b = 102  # ~10%
 
-    t_kernel = _time(lambda a, b: sign_topk_blocks(a, b, jnp.float32(1.0), k_b),
-                     xh, xe)
+    st_fn = lambda a, b: sign_topk_blocks(a, b, jnp.float32(1.0), k_b)  # noqa: E731
+    t_kernel = _time(st_fn, xh, xe)
+    m_kernel = _mem(st_fn, xh, xe)
     t_ref = _time(lambda a, b: ref.sign_topk_ref(
         a.reshape(-1), b.reshape(-1), jnp.float32(1.0), k_b), xh, xe)
     q, _, _, _ = ref.sign_topk_ref(xh.reshape(-1), xe.reshape(-1),
@@ -41,10 +49,14 @@ def run_bench(quick: bool = True) -> List[Dict]:
     omega_emp = 1.0 - float(jnp.sum((diff - q) ** 2) / jnp.sum(diff ** 2))
     rows.append({"name": "kernel_sign_topk(interp)", "us_per_call": round(t_kernel, 1),
                  "ref_us": round(t_ref, 1), "omega_empirical": round(omega_emp, 4),
+                 "peak_hbm_bytes": m_kernel["peak_hbm_bytes"] if m_kernel else None,
+                 "memory": m_kernel,
                  "numel": nb * BLOCK})
 
     u = jax.random.uniform(jax.random.fold_in(key, 2), (nb, BLOCK))
-    t_q = _time(lambda a, b: qsgd_blocks(a, b, s=16), xh, u)
+    q_fn = lambda a, b: qsgd_blocks(a, b, s=16)  # noqa: E731
+    t_q = _time(q_fn, xh, u)
+    m_q = _mem(q_fn, xh, u)
     t_qr = _time(lambda a, b: ref.qsgd_ref(a.reshape(-1), b.reshape(-1), 16),
                  xh, u)
     yq = ref.qsgd_ref(xh.reshape(-1), u.reshape(-1), 16)
@@ -52,14 +64,21 @@ def run_bench(quick: bool = True) -> List[Dict]:
                           / jnp.sum(xh.reshape(-1) ** 2))
     rows.append({"name": "kernel_qsgd(interp)", "us_per_call": round(t_q, 1),
                  "ref_us": round(t_qr, 1), "omega_empirical": round(omega_q, 4),
+                 "peak_hbm_bytes": m_q["peak_hbm_bytes"] if m_q else None,
+                 "memory": m_q,
                  "numel": nb * BLOCK})
 
     flat = xh.reshape(-1)
-    t_f = _time(lambda a, b: ops.trigger_compress_update(
-        a, b, jnp.float32(0.0), k_b), flat, xe.reshape(-1))
+    f_fn = lambda a, b: ops.trigger_compress_update(  # noqa: E731
+        a, b, jnp.float32(0.0), k_b)
+    t_f = _time(f_fn, flat, xe.reshape(-1))
+    m_f = _mem(f_fn, flat, xe.reshape(-1))
     rows.append({"name": "kernel_fused_trigger(interp)",
                  "us_per_call": round(t_f, 1), "ref_us": round(t_kernel + t_ref, 1),
-                 "omega_empirical": round(omega_emp, 4), "numel": nb * BLOCK})
+                 "omega_empirical": round(omega_emp, 4),
+                 "peak_hbm_bytes": m_f["peak_hbm_bytes"] if m_f else None,
+                 "memory": m_f,
+                 "numel": nb * BLOCK})
     return rows
 
 

@@ -41,14 +41,16 @@ def run_bench(quick: bool = True) -> List[Dict]:
     def record(name, cfg_s):
         runner = engine.make_runner(make_step(cfg_s, wl.grad_fn), T,
                                     record_every=rec, eval_fn=wl.eval_fn)
-        st, trace, us = engine.timed_run(
+        st, trace, us, mem = engine.timed_run(
             runner, lambda: cfg_s.init_state(wl.flat0), key, T)
         row = {
             "name": name, "us_per_call": round(us, 1),
             "optimizer": cfg_s.resolved_optimizer().name,
             "final_loss": round(trace[-1][2], 4), "bits": trace[-1][1],
             "trigger_events": int(st.triggers),
-            "sync_rounds": int(st.sync_rounds), "trace": trace}
+            "sync_rounds": int(st.sync_rounds),
+            "peak_hbm_bytes": mem["peak_hbm_bytes"] if mem else None,
+            "memory": mem, "trace": trace}
         row.update(contract_status(cfg_s, int(wl.flat0.size),
                                    bits=row["bits"],
                                    sync_rounds=row["sync_rounds"],
@@ -71,14 +73,15 @@ def run_bench(quick: bool = True) -> List[Dict]:
                                         optimizer=vopt)
     vrunner = engine.make_runner(vstep, T, record_every=rec,
                                  eval_fn=wl.eval_fn)
-    vstate, vtrace, vus = engine.timed_run(
+    vstate, vtrace, vus, vmem = engine.timed_run(
         vrunner, lambda: baselines.init_vanilla(wl.flat0, n, vopt), key, T)
     results.append({"name": "vanilla_mom", "us_per_call": round(vus, 1),
                     "optimizer": vopt.name,
                     "final_loss": round(vtrace[-1][2], 4),
                     "bits": vtrace[-1][1],
                     "trigger_events": T * n, "sync_rounds": T,
-                    "trace": vtrace})
+                    "peak_hbm_bytes": vmem["peak_hbm_bytes"] if vmem else None,
+                    "memory": vmem, "trace": vtrace})
 
     squarm_bits = next(r["bits"] for r in results if r["name"] == "squarm")
     choco_loss = next(r["trace"][-1][2] for r in results

@@ -66,7 +66,7 @@ def run_bench(quick: bool = True) -> List[Dict]:
                           threshold=zero(), lr=lr, H=5)
         runner = engine.make_runner(make_step(cfg, grad_fn), T,
                                     record_every=rec, eval_fn=eval_fn)
-        st, trace, us = engine.timed_run(
+        st, trace, us, mem = engine.timed_run(
             runner, lambda: cfg.init_state(x0), jax.random.PRNGKey(0), T)
         xbar = jnp.mean(st.x, 0)
         consensus = float(jnp.linalg.norm(st.x - xbar[None]))
@@ -83,6 +83,8 @@ def run_bench(quick: bool = True) -> List[Dict]:
             "bits": float(st.bits),
             "rounds": int(st.sync_rounds),
             "trigger_events": int(st.triggers),
+            "peak_hbm_bytes": mem["peak_hbm_bytes"] if mem else None,
+            "memory": mem,
             "trace": trace.to_dict(),
         }
         row.update(contract_status(cfg, f * c, bits=row["bits"],

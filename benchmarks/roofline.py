@@ -117,6 +117,13 @@ def run_bench(quick: bool = True) -> List[Dict]:
     summary = []
     for r in ok:
         lint = r.get("lint")
+        mem = r.get("memory") or {}
+        # the dryrun artifact's memory_analysis terms; alias info is not
+        # recorded there, so the watermark is the conservative (un-aliased)
+        # argument + output + temp sum
+        parts = [mem.get(k) for k in ("argument_bytes", "output_bytes",
+                                      "temp_bytes")]
+        peak = int(sum(parts)) if all(p is not None for p in parts) else None
         summary.append({
             "name": f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
             "us_per_call": round(max(r["compute_s"], r["memory_s"],
@@ -129,6 +136,8 @@ def run_bench(quick: bool = True) -> List[Dict]:
             "hlo_bytes_per_device": r.get("hlo_bytes_per_device"),
             "collective_bytes_per_device":
                 r.get("collective_bytes_per_device"),
+            "peak_hbm_bytes": peak,
+            "memory": mem or None,
             "lint_errors": lint.get("errors") if lint else None,
             "generated_here": bool(generated),
         })

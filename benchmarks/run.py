@@ -29,7 +29,10 @@ import time
 # bits_oracle (the closed-form [lo, hi] bits interval the charged bits must
 # sit in; see analysis/comm_lint.py) — "n/a" / null for rows without a
 # SparqConfig (vanilla baselines, kernels, roofline)
-SCHEMA_VERSION = 2
+# 3: rows carry peak_hbm_bytes (+ the full memory_analysis dict) from the
+# compiled program's memory_analysis() — the spmd_lint P3 watermark, so the
+# perf trajectory tracks memory PR-over-PR alongside us_per_call
+SCHEMA_VERSION = 3
 
 
 def _finite(obj):
@@ -80,15 +83,19 @@ def check_artifacts(dirs) -> int:
     """Re-validate committed BENCH_*.json artifacts: every row's
     contract_status must be green (ok / warn / n/a — an error(R..) or
     bits-mismatch verdict must never be committed) and a row's charged bits
-    must sit inside its stored closed-form oracle interval. Static — reads
-    JSON only — so a hand-edited bits column or a stale artifact fails fast
-    without re-running the suites. Returns the number of bad rows."""
+    must sit inside its stored closed-form oracle interval; every quick row
+    from a schema>=3 artifact must carry a finite positive peak_hbm_bytes
+    (the P3 memory watermark). Static — reads JSON only — so a hand-edited
+    bits column or a stale artifact fails fast without re-running the
+    suites. Returns the number of bad rows."""
     import glob
     bad = checked = 0
     for dir_ in dirs:
         for path in sorted(glob.glob(os.path.join(dir_, "BENCH_*.json"))):
             with open(path) as f:
                 doc = json.load(f)
+            schema = int(doc.get("schema_version", 0))
+            quick = bool(doc.get("quick", False))
             for row in doc.get("rows", []):
                 checked += 1
                 status = str(row.get("contract_status", "n/a"))
@@ -106,6 +113,16 @@ def check_artifacts(dirs) -> int:
                         print(f"[check] {path}: row {row.get('name')!r}: "
                               f"bits {bits:.1f} outside the oracle interval "
                               f"[{lo:.1f}, {hi:.1f}]")
+                if schema >= 3 and quick:
+                    peak = row.get("peak_hbm_bytes")
+                    if not (isinstance(peak, (int, float))
+                            and not isinstance(peak, bool)
+                            and peak == peak and peak not in
+                            (float("inf"), float("-inf")) and peak > 0):
+                        bad += 1
+                        print(f"[check] {path}: row {row.get('name')!r}: "
+                              f"peak_hbm_bytes={peak!r} is not a finite "
+                              f"positive number")
     print(f"[check] {checked} row(s) checked, {bad} bad")
     return bad
 

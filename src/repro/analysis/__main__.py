@@ -15,6 +15,15 @@ which lints the whole tree rather than the programs this CLI happens to
 lower, with grandfathered findings suppressed through the committed
 ``results/SOURCE_BASELINE.json`` (``--baseline`` / ``--regen-baseline``).
 
+``--kernels`` runs the K1-K4 kernel-contract audit (`kernel_lint.py`):
+abstract-eval capture of every registered `pallas_call` (grid coverage,
+index-map bounds, tail masking), interpret-flag hygiene, the closed-form
+VMEM estimate, and the dense-gossip O(n^2) tripwire over the call graph.
+``--spmd`` runs the P1-P4 partitioning/memory audit (`spmd_lint.py`) over
+the dist train step AND the serve prefill/decode lowerings: declared
+PartitionSpecs vs the compiled module's actual sharding annotations,
+reshard intent, and the peak-HBM watermark from `memory_analysis()`.
+
 Exit status 0 iff zero unsuppressed errors; findings land in
 ``results/ANALYSIS.json`` (``--out``) for review-time diffing.
 """
@@ -115,8 +124,18 @@ def hlo_walk_params(hlo: str):
     return hlo_walk.entry_parameters(hlo)
 
 
+def audit_kernels() -> Report:
+    """K1-K4 leg: the pallas_call contract audit (see kernel_lint.py)."""
+    from repro.analysis import kernel_lint
+
+    findings, meta = kernel_lint.audit_kernels(".")
+    report = Report(program="kernels/pallas", meta=meta)
+    report.extend(findings)
+    return report
+
+
 def audit_dist(variant: str, arch: str, use_kernel: bool,
-               contracts: bool = False) -> Report:
+               contracts: bool = False, spmd: bool = False) -> Report:
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.configs.registry import get_config
@@ -214,7 +233,154 @@ def audit_dist(variant: str, arch: str, use_kernel: bool,
             d_model_total=train_step.d_model_total, program=report.program)
         report.extend(f11)
         report.meta["collectives"] = m11
+
+    if spmd:
+        from repro.analysis import spmd_lint
+        from repro.core.engine import compiled_memory_stats
+
+        # P1: declared PartitionSpecs, state then batch (jit's flatten
+        # order), vs the entry annotations of the optimized module
+        def is_spec(x):
+            return isinstance(x, P)
+        spec_leaves = (
+            jax.tree.leaves(state_specs, is_leaf=is_spec)
+            + jax.tree.leaves(sh.train_batch_specs(batch_sds, mesh),
+                              is_leaf=is_spec))
+        sds_leaves = jax.tree.leaves(state_sds) + jax.tree.leaves(batch_sds)
+        labels = _leaf_labels(state_sds) + _leaf_labels(batch_sds)
+        expected = [(lab, spec, len(s.shape))
+                    for lab, spec, s in zip(labels, spec_leaves, sds_leaves)]
+        axes = list(mesh.shape.items())
+        f1, m1 = spmd_lint.lint_param_shardings(hlo, expected, axes,
+                                                program=report.program)
+        report.extend(f1)
+        report.meta["param_shardings"] = m1
+        # P2: the node axis is R11's domain (gossip bits budget); model
+        # carries TP contractions, fsdp carries param/grad movement
+        f2, m2 = spmd_lint.lint_reshards(
+            hlo, axes,
+            axis_roles={"node": "gossip", "fsdp": "fsdp", "model": "tensor"},
+            program=report.program)
+        report.extend(f2)
+        report.meta["reshards"] = m2
+        # P3: peak-HBM watermark of the compiled step
+        f3, m3 = spmd_lint.lint_memory(compiled_memory_stats(compiled),
+                                       program=report.program,
+                                       label="train_step")
+        report.extend(f3)
+        report.meta["memory"] = m3
     return report
+
+
+def audit_serve(arch: str) -> List[Report]:
+    """P1-P4 over the serve prefill/decode lowerings: reduced ``arch`` on
+    the (4, 2) serve mesh, mirroring launch/dryrun.dryrun_serve exactly —
+    lowered under ``with mesh:`` (the with_sharding_constraint calls in the
+    model need the context) and decode donating the cache (argnum 1)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.analysis import spmd_lint
+    from repro.configs.registry import get_config
+    from repro.core.engine import compiled_memory_stats
+    from repro.dist import serve as serve_mod
+    from repro.dist import sharding as sh
+    from repro.models.config import InputShape
+
+    cfg = get_config(arch).reduced()
+    prod = jax.make_mesh((4, 2), ("data", "model"))
+    mesh = sh.serve_mesh(prod)
+    axes = list(mesh.shape.items())
+    roles = {"data": "batch", "model": "tensor"}
+    B, S, CLEN = 8, 32, 64
+    reports: List[Report] = []
+
+    def spmd_pass(report: Report, compiled, expected, must_shard, label):
+        hlo = compiled.as_text()
+        f1, m1 = spmd_lint.lint_param_shardings(hlo, expected, axes,
+                                                program=report.program)
+        report.extend(f1)
+        report.meta["param_shardings"] = m1
+        f2, m2 = spmd_lint.lint_reshards(hlo, axes, axis_roles=roles,
+                                         program=report.program)
+        report.extend(f2)
+        report.meta["reshards"] = m2
+        f3, m3 = spmd_lint.lint_memory(compiled_memory_stats(compiled),
+                                       program=report.program, label=label)
+        report.extend(f3)
+        report.meta["memory"] = m3
+        f4, m4 = spmd_lint.lint_serve_layout(hlo, must_shard,
+                                             program=report.program)
+        report.extend(f4)
+        report.meta["serve_layout"] = m4
+
+    # ---------------------------------------------------------- prefill
+    pshape, _, tok, emb, _ = serve_mod.serve_shapes(
+        cfg, InputShape("audit_prefill", B, S, "prefill"), CLEN)
+    prefill, shardings = serve_mod.build_prefill(cfg, mesh)
+    ps, ts, es = shardings(pshape, tok, emb)
+    rep = Report(program="dist/serve_prefill",
+                 meta={"arch": arch, "B": B, "S": S,
+                       "backend": jax.default_backend()})
+    with mesh:
+        compiled = jax.jit(prefill, in_shardings=(ps, ts, es)).lower(
+            pshape, tok, emb).compile()
+    n_p = len(jax.tree.leaves(pshape))
+    expected = [(lab, ns.spec, len(s.shape))
+                for lab, ns, s in zip(_leaf_labels(pshape),
+                                      jax.tree.leaves(ps),
+                                      jax.tree.leaves(pshape))]
+    batch_ops = []   # (label, sharding, ndim) of the B-leading operands
+    if tok is not None:
+        batch_ops.append(("tokens", ts, 2))
+    if emb is not None:
+        batch_ops.append(("embeds", es, 3))
+    expected += [(lab, ns.spec, nd) for lab, ns, nd in batch_ops]
+    must = [(n_p + i, lab) for i, (lab, _, _) in enumerate(batch_ops)]
+    spmd_pass(rep, compiled, expected, must, "prefill")
+    reports.append(rep)
+
+    # ----------------------------------------------------------- decode
+    _, cshape, tok_d, emb_d, pos = serve_mod.serve_shapes(
+        cfg, InputShape("audit_decode", B, S, "decode"), CLEN)
+    decode, dshardings = serve_mod.build_decode(cfg, mesh)
+    ps, cs, ts, es, pos_s = dshardings(pshape, cshape, tok_d, emb_d)
+    rep = Report(program="dist/serve_decode",
+                 meta={"arch": arch, "B": B, "cache_len": CLEN,
+                       "backend": jax.default_backend()})
+    with mesh:
+        compiled = jax.jit(
+            decode,
+            in_shardings=(ps, cs, ts, es if emb_d is not None else None,
+                          pos_s),
+            donate_argnums=(1,)).lower(pshape, cshape, tok_d, emb_d,
+                                       pos).compile()
+    cache_leaves = jax.tree.leaves(cshape)
+    n_c = len(cache_leaves)
+    cache_specs = [ns.spec for ns in jax.tree.leaves(cs)]
+    cache_labels = _leaf_labels(cshape)
+    expected = [(lab, ns.spec, len(s.shape))
+                for lab, ns, s in zip(_leaf_labels(pshape),
+                                      jax.tree.leaves(ps),
+                                      jax.tree.leaves(pshape))]
+    expected += [(f"cache{lab}", sp, len(s.shape))
+                 for lab, sp, s in zip(cache_labels, cache_specs,
+                                       cache_leaves)]
+    batch_ops = []
+    if tok_d is not None:
+        batch_ops.append(("tokens", ts, 2))
+    if emb_d is not None:
+        batch_ops.append(("embeds", es, 3))
+    expected += [(lab, ns.spec, nd) for lab, ns, nd in batch_ops]
+    expected.append(("pos", P(), 0))
+    # P4 floor: batch operands plus every cache leaf whose declared spec
+    # puts the batch dim on 'data' (those that fit must actually shard)
+    must = [(n_p + i, f"cache{lab}")
+            for i, (lab, sp) in enumerate(zip(cache_labels, cache_specs))
+            if "data" in tuple(sp)]
+    must += [(n_p + n_c + i, lab) for i, (lab, _, _) in enumerate(batch_ops)]
+    spmd_pass(rep, compiled, expected, must, "decode")
+    reports.append(rep)
+    return reports
 
 
 def audit_source(baseline_path, regen: bool):
@@ -274,6 +440,19 @@ def main(argv=None) -> int:
                          "host/trace boundary, static-arg hygiene, "
                          "source donation, docs drift, dead seams) over "
                          "the traced-reachability call graph")
+    ap.add_argument("--kernels", action="store_true",
+                    help="additionally run the K1-K4 kernel-contract rules: "
+                         "abstract-eval capture of every registered "
+                         "pallas_call (grid coverage, index-map bounds, "
+                         "tail masks), interpret-flag hygiene, the "
+                         "closed-form VMEM estimate, and the dense-gossip "
+                         "O(n^2) tripwire")
+    ap.add_argument("--spmd", action="store_true",
+                    help="additionally run the P1-P4 partitioning/memory "
+                         "rules over the dist train step (with --engine "
+                         "dist/both) and the serve prefill/decode "
+                         "lowerings: declared specs vs compiled sharding "
+                         "annotations, reshard intent, peak-HBM watermark")
     ap.add_argument("--baseline", default="results/SOURCE_BASELINE.json",
                     help="committed fingerprint->reason baseline applied "
                          "to --source findings")
@@ -299,7 +478,16 @@ def main(argv=None) -> int:
               f"arch={args.arch}, kernel={not args.no_kernel})", flush=True)
         reports.append(audit_dist(variant, args.arch,
                                   use_kernel=not args.no_kernel,
-                                  contracts=args.contracts))
+                                  contracts=args.contracts,
+                                  spmd=args.spmd))
+    if args.kernels:
+        print("[analysis] auditing pallas_call contracts (K1-K4) via "
+              "abstract eval", flush=True)
+        reports.append(audit_kernels())
+    if args.spmd:
+        print(f"[analysis] auditing serve prefill/decode partitioning "
+              f"(P1-P4, arch={args.arch})", flush=True)
+        reports.extend(audit_serve(args.arch))
     if args.contracts:
         from repro.analysis import comm_lint
         from repro.analysis import contracts as contracts_mod

@@ -60,6 +60,50 @@ lowered program:
   documented small-bytes metrics allowance; unexplained node-axis bytes
   mean the wire cost and the charged bits have drifted apart.
 
+The kernel-contract / SPMD-partitioning passes (analysis/kernel_lint.py and
+analysis/spmd_lint.py) certify the Pallas kernels and the partitioned
+lowerings BEFORE the compiled-kernel / large-n PRs land (ROADMAP items 1-2):
+
+* **K1 pallas-grid-coverage** — every ``pallas_call`` site in
+  src/repro/kernels/ is exercised by a registered abstract-eval probe whose
+  captured grid x BlockSpec tiling covers each operand exactly: index maps
+  stay in bounds, every element is visited, and a padded tail is either
+  masked in the kernel body (``pl.when``) or excluded by an asserted
+  divisibility contract in the wrapper.
+* **K2 interpret-flag-hygiene** — the ``interpret=`` flag threads from
+  config/env (``repro.kernels.interpret_default``), never a hard-coded
+  bool literal at a call site or signature default; each registered kernel
+  must lower to a real compiled custom call (tpu_custom_call / mosaic /
+  triton) or carry the documented interpret-only suppression.
+* **K3 vmem-budget** — a closed-form per-invocation VMEM estimate from the
+  captured BlockSpecs (double-buffered input+output tiles plus scratch)
+  must stay under the per-backend budget; an over-budget tiling would fail
+  to lower on the real target no matter what CI's interpret mode says.
+* **K4 dense-gossip-materialization** — dense ``(n, n)`` / ``(R, n, n)``
+  mixing-matrix materializations and contractions reachable from the dist
+  train step (via the callgraph.py traced-reachability graph) are tagged
+  with their O(n^2) scale ceiling — the lint-time tripwire for ROADMAP
+  item 2's sparse 10k-node gossip.
+* **P1 sharding-spec-drift** — every entry parameter's ACTUAL sharding
+  annotation in the optimized HLO matches the declared dist/sharding.py
+  spec; a silently-replicated declared-sharded parameter above the size
+  threshold is an error (it multiplies HBM by the mesh size without
+  failing any numeric test).
+* **P2 unexplained-reshard** — every collective on non-gossip mesh axes is
+  explained by the declared layout intent: tensor-parallel contractions and
+  fsdp gathers on their axes, or the documented small-reshard allowance
+  (embedding-lookup shuffles); anything else is GSPMD resharding the specs
+  never asked for.
+* **P3 hbm-watermark** — the compiled executable's
+  ``memory_analysis()`` peak-HBM watermark (arguments + outputs - aliased
+  + temporaries) stays under the per-program budget, and every BENCH row
+  records it as ``peak_hbm_bytes``.
+* **P4 serve-partition-audit** — the serve prefill/decode lowerings pass
+  the same P1-P3 audit, plus the serve-specific layout contract: batch
+  operands and decode-cache leaves with a shardable batch dim must
+  actually shard over ``data`` (a replicated KV cache is the HBM hog that
+  voids the roofline claims of ROADMAP item 5).
+
 The source-level pass (analysis/source_lint.py on top of the
 analysis/callgraph.py traced-reachability graph) lints the SOURCE rather than
 any lowered program, so unexercised registry models and compressor branches
@@ -147,6 +191,39 @@ RULES: Dict[str, Rule] = {r.rule_id: r for r in (
          "every node-axis communication op in the dist lowering is "
          "attributable to the gossip bits model (or the documented "
          "small-bytes metrics allowance); zero unexplained bytes"),
+    Rule("K1", "pallas-grid-coverage", ERROR,
+         "every pallas_call site in kernels/ is probed; the captured grid x "
+         "BlockSpec tiling covers each operand with in-bounds index maps, "
+         "and padded tails are masked (pl.when) or divisibility-asserted"),
+    Rule("K2", "interpret-flag-hygiene", ERROR,
+         "interpret= threads from config/env (no hard-coded bool literal at "
+         "call sites or signature defaults); each registered kernel lowers "
+         "to a compiled custom call or carries the documented "
+         "interpret-only suppression"),
+    Rule("K3", "vmem-budget", ERROR,
+         "closed-form per-invocation VMEM estimate from BlockSpecs "
+         "(double-buffered tiles + scratch) stays under the per-backend "
+         "budget"),
+    Rule("K4", "dense-gossip-materialization", WARNING,
+         "dense (n, n) / (R, n, n) mixing-matrix materializations reachable "
+         "from the dist step are tagged with the O(n^2) scale ceiling "
+         "(ROADMAP item 2 tripwire)"),
+    Rule("P1", "sharding-spec-drift", ERROR,
+         "every entry parameter's actual HLO sharding matches the declared "
+         "dist/sharding.py spec; a silently-replicated declared-sharded "
+         "param above threshold_bytes is an error"),
+    Rule("P2", "unexplained-reshard", ERROR,
+         "every non-gossip-axis collective is explained by the declared "
+         "layout intent (tensor/fsdp role on its axes or the small-reshard "
+         "allowance); zero unexplained reshard bytes"),
+    Rule("P3", "hbm-watermark", ERROR,
+         "compiled memory_analysis() peak-HBM watermark (args + outputs - "
+         "aliased + temps) stays under the per-program budget; BENCH rows "
+         "carry peak_hbm_bytes"),
+    Rule("P4", "serve-partition-audit", ERROR,
+         "serve prefill/decode pass the P1-P3 audit plus the serve layout "
+         "contract: batch operands and shardable decode-cache leaves "
+         "actually shard over the data axis"),
     Rule("S1", "prng-key-lineage", ERROR,
          "key linearity at the source level: no >=2 sampler draws on one "
          "key without a rebind, no repeated fold_in constant, no PRNGKey "
@@ -268,9 +345,10 @@ def render_report(reports: Iterable[Report],
         for k, v in r.counts().items():
             totals[k] += v
     doc: Dict[str, object] = {
-        # 3: source-level S1-S6 rules + the top-level "source" block joined
-        # (schema 2 added R6-R11 contracts; schema 1 carried R1-R5 only)
-        "schema_version": 3,
+        # 4: kernel-contract K1-K4 + SPMD partitioning/memory P1-P4 rules
+        # (schema 3 added source-level S1-S6 + the top-level "source" block;
+        # schema 2 added R6-R11 contracts; schema 1 carried R1-R5 only)
+        "schema_version": 4,
         "rules": {rid: {"title": r.title, "severity": r.severity,
                         "contract": r.contract}
                   for rid, r in RULES.items()},
@@ -286,15 +364,19 @@ def render_report(reports: Iterable[Report],
 
 
 def default_suppressions(backend: str) -> Dict[str, Suppression]:
-    """The repo's one sanctioned suppression: off-TPU backends have no
-    Mosaic compiler, so interpret-mode Pallas (R5) is the documented CI
-    fallback there (ROADMAP item 1 tracks real compiled kernels)."""
+    """The repo's sanctioned suppressions: off-TPU backends have no Mosaic
+    compiler, so interpret-mode Pallas is the documented CI fallback there
+    (ROADMAP item 1 tracks real compiled kernels). R5 detects the leak in a
+    lowered program; K2's budget leg certifies each registered kernel and
+    matches only its "interpret-only" lowering findings — the hard-coded
+    literal findings (also K2) stay unsuppressed on every backend."""
     sup: Dict[str, Suppression] = {}
     if backend != "tpu":
-        sup["R5"] = {"match": "interpret",
-                     "reason": "off-TPU backend: interpret-mode Pallas is "
-                               "the sanctioned CI fallback (ROADMAP item 1 "
-                               "tracks compiled Mosaic kernels)"}
+        reason = ("off-TPU backend: interpret-mode Pallas is the sanctioned "
+                  "CI fallback (ROADMAP item 1 tracks compiled Mosaic "
+                  "kernels)")
+        sup["R5"] = {"match": "interpret", "reason": reason}
+        sup["K2"] = {"match": "interpret-only", "reason": reason}
     return sup
 
 

@@ -827,7 +827,7 @@ class _Linter:
                             f"CLI flag {flag_name} ({module}) is not "
                             "documented in README.md",
                             fn.file, cs.lineno)
-        doc_ids = set(re.findall(r"^\|\s*(R\d+|S\d+)\s*\|", readme_text,
+        doc_ids = set(re.findall(r"^\|\s*([RSKP]\d+)\s*\|", readme_text,
                                  flags=re.MULTILINE))
         for rid in rule_ids:
             if rid not in doc_ids:

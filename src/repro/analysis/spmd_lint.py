@@ -1,0 +1,251 @@
+"""SPMD partitioning / memory lint (P1-P4): layout intent vs compiled truth.
+
+R11 already budgets node-axis BYTES; these rules certify the LAYOUT — the
+thing GSPMD silently re-decides whenever a spec rule, an in_sharding, or a
+with_sharding_constraint drifts out of step with the model code:
+
+* **P1 sharding-spec-drift** — every entry parameter of the optimized SPMD
+  module carries a ``sharding={...}`` annotation (hlo_walk parses both the
+  tiled and replicated forms); the actual per-dim shard counts must match
+  the counts the declared ``dist/sharding.py`` PartitionSpecs imply under
+  the mesh axis sizes. A declared-sharded parameter the compiled module
+  keeps fully replicated above ``threshold_bytes`` is an error: it
+  multiplies HBM by the mesh size and slows every collective, without
+  failing one numeric test. Any other mismatch is a warning.
+* **P2 unexplained-reshard** — each collective is resolved to the mesh axes
+  it moves data along (comm_lint's unravel of the device groups) and must
+  be *explained by declared intent*: gossip-axis ops belong to R11's bits
+  budget (skipped here), tensor-axis all-reduce/all-gather/reduce-scatter
+  are TP contractions, fsdp-axis all-gather/reduce-scatter are FSDP
+  param/grad movement, all-to-all is sanctioned only for declared MoE
+  dispatch, and everything else (batch-axis traffic, layout permutes) must
+  fit the small-reshard allowance that covers embedding-lookup shuffles.
+* **P3 hbm-watermark** — the compiled executable's ``memory_analysis()``
+  (works on CPU XLA) is folded into a peak-HBM watermark (arguments +
+  outputs - aliased + temporaries, engine.compiled_memory_stats) with a
+  per-program budget; every BENCH row records the same number as
+  ``peak_hbm_bytes``, so the perf trajectory carries memory PR-over-PR.
+* **P4 serve-partition-audit** — prefill/decode get the same P1-P3 pass
+  (wired in analysis/__main__), plus the serve-specific floor this module
+  checks directly: operands the caller marks as must-shard (batch inputs
+  and decode-cache leaves whose batch dim divides the ``data`` axis) must
+  NOT lower fully replicated — a replicated KV cache is the memory hog
+  that voids ROADMAP item 5's roofline claims at real batch sizes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.analysis.comm_lint import _INTERPRET_MARKERS, _varying_axes
+from repro.analysis.rules import Finding, finding
+
+# P1: a silently-replicated declared-sharded param below this is a warning,
+# above it an error (same 1 MB line as the R1 donation threshold)
+REPLICATED_THRESHOLD_BYTES = 1 << 20
+# P2: resharding allowance per op — embedding-lookup shuffles and layout
+# permutes of a few KB are how GSPMD implements a sharded gather; model-scale
+# traffic must be explained by an axis role instead
+RESHARD_ALLOWANCE_BYTES = 64 * 1024
+# P3 default budget: one v5e-class device's HBM
+HBM_BUDGET_BYTES = 16 * 2**30
+
+
+# ------------------------------------------------------------------------- P1
+
+def spec_shard_counts(spec, ndim: int, sizes: Mapping[str, int]
+                      ) -> Tuple[int, ...]:
+    """Per-dim shard counts a PartitionSpec implies under the mesh sizes.
+
+    Entries past the spec's length are implicit None (replicated); a tuple
+    entry multiplies its axes' sizes (GSPMD tiles the dim by the product)."""
+    counts = [1] * ndim
+    for d, entry in enumerate(tuple(spec)[:ndim]):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        c = 1
+        for a in axes:
+            c *= int(sizes.get(a, 1))
+        counts[d] = c
+    return tuple(counts)
+
+
+def lint_param_shardings(hlo: str, expected: Sequence[Tuple[str, Any, int]],
+                         axis_sizes: Sequence[Tuple[str, int]], *,
+                         program: str,
+                         threshold_bytes: int = REPLICATED_THRESHOLD_BYTES
+                         ) -> Tuple[List[Finding], Dict[str, Any]]:
+    """P1: ``expected`` is one ``(label, PartitionSpec, ndim)`` triple per
+    entry parameter in jit's flatten order (the caller builds it from the
+    declared spec tree — state first, then batch, exactly as the arguments
+    flatten)."""
+    from repro.launch import hlo_walk
+
+    sizes = dict(axis_sizes)
+    actual = hlo_walk.entry_parameter_shardings(hlo)
+    out: List[Finding] = []
+    meta: Dict[str, Any] = {"params": len(actual), "checked": 0,
+                            "replicated_bytes": 0, "mismatches": 0}
+    if len(actual) != len(expected):
+        out.append(finding(
+            "P1", f"entry parameter count {len(actual)} != declared spec "
+                  f"leaf count {len(expected)}: cannot align the spec tree "
+                  f"with the compiled module", program,
+            severity="warning"))
+        return out, meta
+    for rec, (label, spec, ndim) in zip(actual, expected):
+        meta["checked"] += 1
+        nbytes = hlo_walk.parameter_bytes(str(rec["dtype"]),
+                                          list(rec["dims"]))
+        sh = rec["sharding"]
+        want = spec_shard_counts(spec, ndim, sizes)
+        if sh is None:
+            # single-device lowerings carry no annotation; only a problem
+            # when the declared spec wanted shards
+            if any(c > 1 for c in want):
+                out.append(finding(
+                    "P1", f"param {rec['index']} ({label}) has no sharding "
+                          f"annotation but spec {spec} declares shards "
+                          f"{want}", f"{program}:param{rec['index']}"))
+            continue
+        got = sh["counts"] if sh["counts"] is not None else (1,) * ndim
+        if tuple(got) == tuple(want):
+            continue
+        meta["mismatches"] += 1
+        declared_sharded = any(c > 1 for c in want)
+        actually_replicated = all(c == 1 for c in got)
+        loc = f"{program}:param{rec['index']}"
+        opn = f" op_name={rec['op_name']!r}" if rec["op_name"] else ""
+        if actually_replicated and declared_sharded and \
+                nbytes > threshold_bytes:
+            meta["replicated_bytes"] += nbytes
+            out.append(finding(
+                "P1", f"silently replicated: param {rec['index']} ({label}, "
+                      f"{nbytes} bytes) is declared {spec} -> shards {want} "
+                      f"but the compiled module keeps it fully replicated"
+                      f"{opn}", loc))
+        else:
+            out.append(finding(
+                "P1", f"sharding drift: param {rec['index']} ({label}) "
+                      f"declared {spec} -> shards {want}, compiled module "
+                      f"has {tuple(got)}{opn}", loc,
+                severity="warning"))
+    return out, meta
+
+
+# ------------------------------------------------------------------------- P2
+
+def lint_reshards(hlo: str, axis_sizes: Sequence[Tuple[str, int]], *,
+                  axis_roles: Mapping[str, str], program: str,
+                  moe: bool = False,
+                  allowance_bytes: int = RESHARD_ALLOWANCE_BYTES
+                  ) -> Tuple[List[Finding], Dict[str, Any]]:
+    """P2: classify every collective by the roles of the axes it moves data
+    along. ``axis_roles`` maps mesh axis name -> ``"gossip"`` (R11's
+    domain, skipped), ``"tensor"``, ``"fsdp"`` or ``"batch"``."""
+    from repro.launch import hlo_walk
+
+    names = [a for a, _ in axis_sizes]
+    sizes = [int(s) for _, s in axis_sizes]
+    meta: Dict[str, Any] = {
+        "ops": 0, "gossip_domain_bytes": 0.0, "tensor_bytes": 0.0,
+        "fsdp_bytes": 0.0, "moe_bytes": 0.0, "small_reshard_bytes": 0.0,
+        "interpret_sim_bytes": 0.0, "unexplained_bytes": 0.0,
+        "allowance_bytes": allowance_bytes,
+    }
+    out: List[Finding] = []
+    for op in hlo_walk.collective_ops(hlo):
+        meta["ops"] += 1
+        nbytes = float(op["result_bytes"])
+        kind = str(op["kind"])
+        opn = str(op["op_name"]).lower()
+        if any(mark in opn for mark in _INTERPRET_MARKERS):
+            meta["interpret_sim_bytes"] += nbytes
+            continue
+        axes = _varying_axes(op["groups"], op["pairs"], sizes)
+        roles = {axis_roles.get(names[a], "batch") for a in axes}
+        if not axes:
+            continue  # degenerate single-device group
+        if "gossip" in roles:
+            meta["gossip_domain_bytes"] += nbytes
+            continue
+        if roles <= {"tensor", "fsdp"}:
+            if kind in ("all-reduce", "all-gather", "reduce-scatter"):
+                key = "tensor_bytes" if roles == {"tensor"} else "fsdp_bytes"
+                meta[key] += nbytes
+                continue
+            if kind == "all-to-all" and moe and roles == {"tensor"}:
+                meta["moe_bytes"] += nbytes
+                continue
+        if nbytes <= allowance_bytes:
+            meta["small_reshard_bytes"] += nbytes
+            continue
+        meta["unexplained_bytes"] += nbytes
+        axnames = sorted(names[a] for a in axes)
+        out.append(finding(
+            "P2", f"unexplained reshard: {kind} of {nbytes:.0f} bytes over "
+                  f"mesh axes {axnames} "
+                  f"({'while-reachable' if op['while_reachable'] else 'top-level'}"
+                  f"{', op_name=' + repr(op['op_name']) if op['op_name'] else ''})"
+                  f" is not explained by the declared layout intent",
+            f"{program}:{op['computation']}"))
+    return out, meta
+
+
+# ------------------------------------------------------------------------- P3
+
+def lint_memory(mem: Optional[Dict[str, int]], *, program: str,
+                budget_bytes: int = HBM_BUDGET_BYTES, label: str = ""
+                ) -> Tuple[List[Finding], Dict[str, Any]]:
+    """P3: peak-HBM watermark (engine.compiled_memory_stats dict) vs
+    budget."""
+    tag = f" [{label}]" if label else ""
+    if mem is None:
+        return [finding(
+            "P3", f"no memory_analysis available for{tag or ' the'} "
+                  f"compiled module: peak-HBM watermark unknown", program,
+            severity="warning")], {}
+    meta = dict(mem)
+    meta["budget_bytes"] = budget_bytes
+    out: List[Finding] = []
+    if mem["peak_hbm_bytes"] > budget_bytes:
+        out.append(finding(
+            "P3", f"peak-HBM watermark{tag} {mem['peak_hbm_bytes']} bytes "
+                  f"(args {mem['argument_bytes']} + out "
+                  f"{mem['output_bytes']} - aliased {mem['alias_bytes']} + "
+                  f"temps {mem['temp_bytes']}) exceeds the "
+                  f"{budget_bytes}-byte budget", program))
+    return out, meta
+
+
+# ------------------------------------------------------------------------- P4
+
+def lint_serve_layout(hlo: str, must_shard: Sequence[Tuple[int, str]], *,
+                      program: str) -> Tuple[List[Finding], Dict[str, Any]]:
+    """P4 (serve floor): entry parameters in ``must_shard`` — batch operands
+    and decode-cache leaves whose batch dim divides the data axis — must not
+    lower fully replicated, whatever the declared specs said."""
+    from repro.launch import hlo_walk
+
+    actual = {r["index"]: r for r in hlo_walk.entry_parameter_shardings(hlo)}
+    out: List[Finding] = []
+    meta: Dict[str, Any] = {"must_shard": len(must_shard), "replicated": 0}
+    for idx, label in must_shard:
+        rec = actual.get(idx)
+        if rec is None:
+            out.append(finding(
+                "P4", f"must-shard operand {label} (param {idx}) missing "
+                      f"from the entry parameters", program))
+            continue
+        sh = rec["sharding"]
+        replicated = sh is None or sh["replicated"]
+        if replicated:
+            meta["replicated"] += 1
+            nbytes = hlo_walk.parameter_bytes(str(rec["dtype"]),
+                                              list(rec["dims"]))
+            out.append(finding(
+                "P4", f"serve layout: {label} (param {idx}, {nbytes} bytes) "
+                      f"lowers fully replicated although its batch dim "
+                      f"divides the data axis — shard it over 'data'",
+                f"{program}:param{idx}"))
+    return out, meta

@@ -2,7 +2,8 @@
 from repro.core.compression import (Compressor, Identity, QSGD, QsTopK, RandK,
                                     Sign, SignTopK, TopFrac, TopK,
                                     make_compressor)
-from repro.core.engine import Trace, make_runner, run_traced, timed_run
+from repro.core.engine import (Trace, compiled_memory_stats, make_runner,
+                               run_traced, timed_run)
 from repro.core.faults import DropoutWindow, FaultPlan, resolve_faults
 from repro.core.schedule import (LRSchedule, decaying, fixed, is_sync,
                                  theorem1_lr, theorem2_lr, warmup_piecewise)
@@ -20,7 +21,8 @@ __all__ = [
     "SparqState", "init_state", "make_step", "run", "run_loop", "run_scan",
     "squarm_config",
     "DropoutWindow", "FaultPlan", "resolve_faults",
-    "Trace", "make_runner", "run_traced", "timed_run", "Topology",
+    "Trace", "compiled_memory_stats", "make_runner", "run_traced",
+    "timed_run", "Topology",
     "GossipPlan", "make_plan",
     "make_topology", "ThresholdSchedule", "constant", "make_schedule",
     "piecewise", "poly", "should_trigger", "zero",

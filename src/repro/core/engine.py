@@ -208,25 +208,54 @@ def run_traced(step_fn: Callable[[Any, jax.Array], Any], state: Any, T: int,
     return runner(state, key)
 
 
+def compiled_memory_stats(compiled: Any) -> Optional[dict]:
+    """``compiled.memory_analysis()`` -> plain-int dict with the derived
+    ``peak_hbm_bytes`` watermark (arguments + outputs - aliased + temps;
+    donated carries alias their outputs, so the aliased bytes are counted
+    once). Works on CPU XLA too — the analysis/spmd_lint P3 rule and every
+    BENCH row read this. None when the executable exposes no analysis."""
+    try:
+        m = compiled.memory_analysis()
+    except Exception:
+        return None
+    if m is None:
+        return None
+    out = {}
+    for k in ("argument", "output", "temp", "alias", "generated_code"):
+        v = getattr(m, f"{k}_size_in_bytes", None)
+        out[f"{k}_bytes"] = int(v) if v is not None else 0
+    out["peak_hbm_bytes"] = (out["argument_bytes"] + out["output_bytes"]
+                             - out["alias_bytes"] + out["temp_bytes"])
+    return out
+
+
 def timed_run(runner: Callable[[Any, jax.Array], Tuple[Any, Trace]],
               make_state: Callable[[], Any], key: jax.Array,
-              T: int) -> Tuple[Any, Trace, float]:
+              T: int) -> Tuple[Any, Trace, float, Optional[dict]]:
     """Benchmark-fidelity timing: AOT-compile the runner first, then time one
     run end to end.
 
-    Returns ``(final_state, trace, us_per_call)`` where ``us_per_call`` is
-    steady-state wall time per step — jit compilation is excluded (the legacy
-    suites started the clock before the first, compiling, step and so folded
-    the whole XLA compile into ``us_per_call``). The warm-up is a compile
-    only, not a throwaway T-step execution.
+    Returns ``(final_state, trace, us_per_call, memory)`` where
+    ``us_per_call`` is steady-state wall time per step — jit compilation is
+    excluded (the legacy suites started the clock before the first,
+    compiling, step and so folded the whole XLA compile into
+    ``us_per_call``) — and ``memory`` is the
+    :func:`compiled_memory_stats` dict of the warmed executable (the
+    ``peak_hbm_bytes`` column of every BENCH row), or None for a generic
+    runner with no AOT-compiled artifact. The warm-up is a compile only,
+    not a throwaway T-step execution.
     """
     warmup = getattr(runner, "warmup", None)
+    mem: Optional[dict] = None
     if warmup is not None:
         warmup(make_state(), key)
+        compiled = getattr(runner, "compiled", lambda: None)()
+        if compiled is not None:
+            mem = compiled_memory_stats(compiled)
     else:                                 # generic runner: warm by executing
         jax.block_until_ready(runner(make_state(), key)[0])
     t0 = time.perf_counter()
     state, trace = runner(make_state(), key)
     jax.block_until_ready(state)
     dt = time.perf_counter() - t0
-    return state, trace, dt / max(T, 1) * 1e6
+    return state, trace, dt / max(T, 1) * 1e6, mem

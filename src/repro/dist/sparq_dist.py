@@ -57,6 +57,7 @@ from repro.core.schedule import LRSchedule, decaying
 from repro.core.sparq import gossip_mix, sync_message_bits, trigger_mask
 from repro.core.topology import GossipPlan, Topology, circulant_row, make_plan
 from repro.core.triggers import ThresholdSchedule, zero
+from repro import kernels as kernels_mod
 from repro.kernels.sign_topk import BLOCK, BLOCK_ROWS, sign_topk_blocks
 from repro.models.transformer import init_params, lm_loss
 from repro.optim.sgd import Optimizer, resolve_optimizer
@@ -232,7 +233,9 @@ def build_sparq(cfg, mesh, dcfg: DistSparqConfig
     H = int(dcfg.H)
     mbs = int(dcfg.microbatches)
     xhat_dt = jnp.dtype(dcfg.xhat_dtype)
-    interpret = jax.default_backend() != "tpu"
+    # resolved ONCE at build time (env/backend — repro.kernels), then passed
+    # down as a concrete static arg so the trace-cache key stays stable
+    interpret = kernels_mod.interpret_default()
     k_b = max(1, min(BLOCK, int(math.ceil(dcfg.frac * BLOCK))))
     if dcfg.variant not in ("dense", "ring", "shift"):
         raise ValueError(f"unknown variant {dcfg.variant!r}")

@@ -1,3 +1,31 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Pallas kernel package: the one place the interpret flag is resolved.
+
+Every kernel wrapper takes ``interpret: Optional[bool] = None`` and resolves
+``None`` through :func:`interpret_default`, so flipping a TPU/GPU run into
+compiled mode is a config/env decision (``REPRO_PALLAS_INTERPRET=0``), never
+a code edit — the K2 interpret-flag-hygiene contract (repro.analysis)."""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+
+def interpret_default(interpret: Optional[bool] = None) -> bool:
+    """Resolve the Pallas interpret flag.
+
+    Explicit argument wins; else the ``REPRO_PALLAS_INTERPRET`` env var
+    (``1/true/yes`` ~ interpret, ``0/false/no`` ~ compiled); else interpret
+    everywhere but TPU (no Mosaic compiler off-TPU — the sanctioned CI
+    fallback, see rules.default_suppressions)."""
+    if interpret is not None:
+        return bool(interpret)
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip().lower()
+    if env in ("1", "true", "yes", "on"):
+        return True
+    if env in ("0", "false", "no", "off"):
+        return False
+    import jax
+    return jax.default_backend() != "tpu"

@@ -2,17 +2,19 @@
 
 These provide flat-vector semantics over the blockwise kernels (padding to
 BLOCK=1024 tiles), the interface the distributed gossip path consumes.
-interpret defaults to True because this container has no TPU; on TPU pass
-interpret=False (kernels are written for pl.pallas_call + BlockSpec VMEM tiling).
+``interpret=None`` resolves through :func:`repro.kernels.interpret_default`
+(the ``REPRO_PALLAS_INTERPRET`` env var, else compiled on TPU / interpret
+elsewhere) — never a hard-coded literal, the K2 hygiene contract.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import interpret_default
 from repro.kernels.qsgd import BLOCK, qsgd_blocks
 from repro.kernels.sign_topk import sign_topk_blocks
 
@@ -25,12 +27,13 @@ def _to_blocks(x: jax.Array) -> Tuple[jax.Array, int, int]:
 
 
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
-def sign_topk(flat: jax.Array, k: int, interpret: bool = True
+def sign_topk(flat: jax.Array, k: int, interpret: Optional[bool] = None
               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Blockwise SignTopK of a flat vector, k total (ceil-split across blocks).
 
     Returns (q dense (d,), values (n*k_b,), indices (n*k_b,) global int32) —
     the (q, vals, idx) contract dist/sparq_dist.py's gossip uses."""
+    interpret = interpret_default(interpret)
     xb, d, n = _to_blocks(flat)
     k_b = max(1, -(-k // n))
     q, xe_new, scale = sign_topk_blocks(xb, jnp.zeros_like(xb),
@@ -46,12 +49,13 @@ def sign_topk(flat: jax.Array, k: int, interpret: bool = True
 @functools.partial(jax.jit, static_argnames=("k_b", "interpret"))
 def trigger_compress_update(x_half: jax.Array, x_hat: jax.Array,
                             threshold: jax.Array, k_b: int,
-                            interpret: bool = True
+                            interpret: Optional[bool] = None
                             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Full fused SPARQ sync compute for one flat shard:
 
     trig = [||x_half - x_hat||^2 > threshold];  q = trig * SignTopK_b(diff);
     x_hat_new = x_hat + q.    Returns (q, x_hat_new, trig)."""
+    interpret = interpret_default(interpret)
     xh, d, n = _to_blocks(x_half)
     xe, _, _ = _to_blocks(x_hat)
     diff = (x_half - x_hat).astype(jnp.float32)
@@ -62,8 +66,9 @@ def trigger_compress_update(x_half: jax.Array, x_hat: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("s", "interpret"))
 def qsgd(flat: jax.Array, key: jax.Array, s: int = 16,
-         interpret: bool = True) -> jax.Array:
+         interpret: Optional[bool] = None) -> jax.Array:
     """Blockwise QSGD quantization of a flat vector."""
+    interpret = interpret_default(interpret)
     xb, d, n = _to_blocks(flat)
     u = jax.random.uniform(key, xb.shape, dtype=jnp.float32)
     out = qsgd_blocks(xb, u, s=s, interpret=interpret)

@@ -9,10 +9,13 @@ replay need — and sidesteps pltpu PRNG availability in interpret mode).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import interpret_default
 
 BLOCK = 1024
 BLOCK_ROWS = 8
@@ -31,8 +34,10 @@ def _qsgd_kernel(x_ref, u_ref, out_ref, *, s: int):
 
 @functools.partial(jax.jit, static_argnames=("s", "interpret"))
 def qsgd_blocks(x: jax.Array, u: jax.Array, s: int = 16,
-                interpret: bool = True) -> jax.Array:
-    """x, u: (n_blocks, BLOCK). Returns quantized x (same shape/dtype)."""
+                interpret: Optional[bool] = None) -> jax.Array:
+    """x, u: (n_blocks, BLOCK). Returns quantized x (same shape/dtype).
+    ``interpret=None`` resolves via repro.kernels.interpret_default."""
+    interpret = interpret_default(interpret)
     n, b = x.shape
     assert b == BLOCK
     rows = min(BLOCK_ROWS, n)

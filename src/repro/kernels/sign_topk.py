@@ -19,11 +19,13 @@ sort runs on 8x128 vregs.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import interpret_default
 
 BLOCK = 1024
 BLOCK_ROWS = 8  # tiles per grid step: VMEM slab = 8 x 1024 x 4B x 3 = 96 KiB
@@ -55,11 +57,13 @@ def _sign_topk_kernel(xh_ref, xe_ref, trig_ref, q_ref, xe_new_ref, scale_ref,
 
 @functools.partial(jax.jit, static_argnames=("k_b", "interpret"))
 def sign_topk_blocks(x_half: jax.Array, x_hat: jax.Array, trig: jax.Array,
-                     k_b: int, interpret: bool = True
+                     k_b: int, interpret: Optional[bool] = None
                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """x_half, x_hat: (n_blocks, BLOCK); trig: () f32 in {0., 1.}.
 
-    Returns (q, x_hat_new, per-block scale). interpret=True on CPU."""
+    Returns (q, x_hat_new, per-block scale). ``interpret=None`` resolves via
+    :func:`repro.kernels.interpret_default` (env/backend, never a literal)."""
+    interpret = interpret_default(interpret)
     n, b = x_half.shape
     assert b == BLOCK, f"inner dim must be {BLOCK}"
     rows = min(BLOCK_ROWS, n)

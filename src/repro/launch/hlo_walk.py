@@ -450,6 +450,76 @@ def entry_parameters(hlo: str) -> List[Tuple[str, List[int]]]:
     return out
 
 
+_SHARDING_RE = re.compile(r"sharding=\{([^{}]*)\}")
+_TILE_RE = re.compile(r"devices=\[([0-9,]+)\]<=\[")
+
+
+def parse_sharding(annot: str) -> Dict[str, object]:
+    """One HLO ``sharding={...}`` annotation -> per-dim shard counts.
+
+    Returns ``{"kind", "counts", "replicated"}`` where ``counts`` is the
+    number of shards along each tensor dim (``last_tile_dim_replicate``
+    drops the trailing replication dim from the tile assignment). The four
+    forms GSPMD prints for jit entry parameters:
+
+    * ``{replicated}``                                  -> counts = None
+    * ``{maximal device=N}``                            -> counts = None
+    * ``{devices=[4,1,2]<=[8]}``                        -> (4, 1, 2)
+    * ``{devices=[4,1,1,2]<=[8] last_tile_dim_replicate}`` -> (4, 1, 1)
+
+    (the iota ``<=[dims]T(perm)`` suffix permutes which DEVICE goes where,
+    not how many shards each dim has, so it is irrelevant here)."""
+    annot = annot.strip()
+    if annot == "replicated" or annot.startswith("maximal"):
+        return {"kind": annot.split()[0], "counts": None, "replicated": True}
+    m = _TILE_RE.search(annot)
+    if not m:
+        return {"kind": "unknown", "counts": None, "replicated": False}
+    dims = [int(x) for x in m.group(1).split(",") if x]
+    if "last_tile_dim_replicate" in annot:
+        dims = dims[:-1]
+    counts = tuple(dims)
+    return {"kind": "tiled", "counts": counts,
+            "replicated": all(c == 1 for c in counts)}
+
+
+def entry_parameter_shardings(hlo: str) -> List[Dict[str, object]]:
+    """Per-entry-parameter actual sharding of a compiled SPMD module.
+
+    One record per ``parameter(N)`` instruction of the ENTRY computation:
+    ``{"index", "dtype", "dims", "sharding", "op_name"}`` — ``sharding`` is
+    the :func:`parse_sharding` record (or None when the instruction carries
+    no annotation, e.g. single-device lowerings), ``op_name`` the pytree
+    path GSPMD records in the op metadata (empty when absent). Sorted by
+    parameter index."""
+    comps, entry = parse_module(hlo)
+    del comps
+    bodies = computation_bodies(hlo)
+    lines = bodies.get(entry or "", [])
+    out: List[Dict[str, object]] = []
+    for s in lines:
+        dm = _DEF_RE.match(s)
+        if not dm:
+            continue
+        rhs = dm.group(2)
+        pm = re.search(r"\bparameter\((\d+)\)", rhs)
+        if not pm:
+            continue
+        shapes = _parse_shapes(rhs[:rhs.index("parameter(")])
+        dt, dims = shapes[0] if shapes else ("unknown", [])
+        sm = _SHARDING_RE.search(s)
+        om = _OPNAME_RE.search(s)
+        out.append({
+            "index": int(pm.group(1)),
+            "dtype": dt,
+            "dims": dims,
+            "sharding": parse_sharding(sm.group(1)) if sm else None,
+            "op_name": om.group(1) if om else "",
+        })
+    out.sort(key=lambda r: r["index"])
+    return out
+
+
 def parameter_bytes(dtype: str, dims: List[int]) -> int:
     n = 1
     for d in dims:

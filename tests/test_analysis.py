@@ -305,10 +305,12 @@ def test_render_report_document_shape():
     sup = default_suppressions("cpu")
     apply_suppressions(r.findings, sup)
     doc = render_report([r], sup, extra={"jax_version": jax.__version__})
-    assert doc["ok"] and doc["schema_version"] == 3
+    assert doc["ok"] and doc["schema_version"] == 4
     assert set(doc["rules"]) == {"R1", "R2", "R3", "R4", "R5",
                                  "R6", "R7", "R8", "R9", "R10", "R11",
-                                 "S1", "S2", "S3", "S4", "S5", "S6"}
+                                 "S1", "S2", "S3", "S4", "S5", "S6",
+                                 "K1", "K2", "K3", "K4",
+                                 "P1", "P2", "P3", "P4"}
     assert doc["programs"][0]["counts"]["suppressed"] == 1
     assert doc["jax_version"] == jax.__version__
 
