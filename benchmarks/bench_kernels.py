@@ -1,6 +1,19 @@
-"""Compression-kernel microbenchmark: us/call of the Pallas kernels
-(interpret mode on CPU — structural check + empirical omega; TPU wall-times
-come from the same entry points with interpret=False) vs their jnp oracles."""
+"""Compression-kernel microbenchmark, one row per (kernel, lowering leg).
+
+Each kernel is timed on BOTH committed legs at the same shapes:
+
+  * ``interpret`` — the Pallas interpreter executing the kernel body
+    op-by-op on CPU (structural check; wall-times are simulation times),
+  * ``xla``       — the compiled leg: the identical blockwise math lowered
+    through XLA (the off-TPU production default; on TPU the same entry
+    points take ``lowering="pallas"``).
+
+Every sign_topk row also carries ``bit_equal_oracle``: the leg's (q,
+x_hat_new) output compared BIT-for-bit against the pure-jnp ``ref.py``
+oracle at the benchmarked shape — a compiled row whose numerics drifted
+from the oracle must never be committed (``run.py --check-artifacts``
+re-validates the stored flag). ``ref_us`` is the unfused global-top_k XLA
+reference at the same element count."""
 from __future__ import annotations
 
 import time
@@ -8,11 +21,14 @@ from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.engine import compiled_memory_stats
-from repro.kernels import ops, ref
+from repro.kernels import LOWERINGS, ops, ref
 from repro.kernels.qsgd import qsgd_blocks
 from repro.kernels.sign_topk import BLOCK, sign_topk_blocks
+
+LEGS = tuple(lw for lw in LOWERINGS if lw != "pallas")  # CPU-runnable legs
 
 
 def _time(fn, *args, reps=20):
@@ -30,55 +46,84 @@ def _mem(fn, *args):
     return compiled_memory_stats(jax.jit(fn).lower(*args).compile())
 
 
+def _bit_equal(got, want) -> bool:
+    return all(np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(got, want, strict=True))
+
+
 def run_bench(quick: bool = True) -> List[Dict]:
     rows = []
-    nb = 64 if quick else 1024  # 64 KiB-ish to 1 MiB-ish shards
+    nb = 64 if quick else 1024  # 64K elements quick, 1M full
     key = jax.random.PRNGKey(0)
     xh = jax.random.normal(key, (nb, BLOCK))
     xe = 0.5 * jax.random.normal(jax.random.fold_in(key, 1), (nb, BLOCK))
     k_b = 102  # ~10%
 
-    st_fn = lambda a, b: sign_topk_blocks(a, b, jnp.float32(1.0), k_b)  # noqa: E731
-    t_kernel = _time(st_fn, xh, xe)
-    m_kernel = _mem(st_fn, xh, xe)
+    # unfused oracle: global top_k over the flat vector (timed once; it has
+    # no lowering legs) + its outputs for the bit-equality pins
+    q_r, xn_r, _, _ = ref.sign_topk_ref(xh.reshape(-1), xe.reshape(-1),
+                                        jnp.float32(1.0), k_b)
     t_ref = _time(lambda a, b: ref.sign_topk_ref(
         a.reshape(-1), b.reshape(-1), jnp.float32(1.0), k_b), xh, xe)
-    q, _, _, _ = ref.sign_topk_ref(xh.reshape(-1), xe.reshape(-1),
-                                   jnp.float32(1.0), k_b)
     diff = xh.reshape(-1) - xe.reshape(-1)
-    omega_emp = 1.0 - float(jnp.sum((diff - q) ** 2) / jnp.sum(diff ** 2))
-    rows.append({"name": "kernel_sign_topk(interp)", "us_per_call": round(t_kernel, 1),
-                 "ref_us": round(t_ref, 1), "omega_empirical": round(omega_emp, 4),
-                 "peak_hbm_bytes": m_kernel["peak_hbm_bytes"] if m_kernel else None,
-                 "memory": m_kernel,
-                 "numel": nb * BLOCK})
+    omega_emp = 1.0 - float(jnp.sum((diff - q_r) ** 2) / jnp.sum(diff ** 2))
 
     u = jax.random.uniform(jax.random.fold_in(key, 2), (nb, BLOCK))
-    q_fn = lambda a, b: qsgd_blocks(a, b, s=16)  # noqa: E731
-    t_q = _time(q_fn, xh, u)
-    m_q = _mem(q_fn, xh, u)
+    yq = ref.qsgd_ref(xh.reshape(-1), u.reshape(-1), 16)
     t_qr = _time(lambda a, b: ref.qsgd_ref(a.reshape(-1), b.reshape(-1), 16),
                  xh, u)
-    yq = ref.qsgd_ref(xh.reshape(-1), u.reshape(-1), 16)
     omega_q = 1.0 - float(jnp.sum((xh.reshape(-1) - yq) ** 2)
                           / jnp.sum(xh.reshape(-1) ** 2))
-    rows.append({"name": "kernel_qsgd(interp)", "us_per_call": round(t_q, 1),
-                 "ref_us": round(t_qr, 1), "omega_empirical": round(omega_q, 4),
-                 "peak_hbm_bytes": m_q["peak_hbm_bytes"] if m_q else None,
-                 "memory": m_q,
-                 "numel": nb * BLOCK})
 
-    flat = xh.reshape(-1)
-    f_fn = lambda a, b: ops.trigger_compress_update(  # noqa: E731
-        a, b, jnp.float32(0.0), k_b)
-    t_f = _time(f_fn, flat, xe.reshape(-1))
-    m_f = _mem(f_fn, flat, xe.reshape(-1))
-    rows.append({"name": "kernel_fused_trigger(interp)",
-                 "us_per_call": round(t_f, 1), "ref_us": round(t_kernel + t_ref, 1),
-                 "omega_empirical": round(omega_emp, 4),
-                 "peak_hbm_bytes": m_f["peak_hbm_bytes"] if m_f else None,
-                 "memory": m_f,
-                 "numel": nb * BLOCK})
+    for leg in LEGS:
+        st_fn = lambda a, b: sign_topk_blocks(  # noqa: E731
+            a, b, jnp.float32(1.0), k_b, lowering=leg)
+        t_kernel = _time(st_fn, xh, xe)
+        m_kernel = _mem(st_fn, xh, xe)
+        q_k, xn_k, _ = st_fn(xh, xe)
+        eq = _bit_equal((q_k.reshape(-1), xn_k.reshape(-1)), (q_r, xn_r))
+        rows.append({"name": f"kernel_sign_topk({leg})",
+                     "lowering": leg,
+                     "us_per_call": round(t_kernel, 1),
+                     "ref_us": round(t_ref, 1),
+                     "bit_equal_oracle": eq,
+                     "omega_empirical": round(omega_emp, 4),
+                     "peak_hbm_bytes": (m_kernel["peak_hbm_bytes"]
+                                        if m_kernel else None),
+                     "memory": m_kernel,
+                     "numel": nb * BLOCK})
+
+        q_fn = lambda a, b: qsgd_blocks(a, b, s=16, lowering=leg)  # noqa: E731
+        t_q = _time(q_fn, xh, u)
+        m_q = _mem(q_fn, xh, u)
+        eq_q = _bit_equal((q_fn(xh, u).reshape(-1),), (yq,))
+        rows.append({"name": f"kernel_qsgd({leg})",
+                     "lowering": leg,
+                     "us_per_call": round(t_q, 1),
+                     "ref_us": round(t_qr, 1),
+                     "bit_equal_oracle": eq_q,
+                     "omega_empirical": round(omega_q, 4),
+                     "peak_hbm_bytes": (m_q["peak_hbm_bytes"]
+                                        if m_q else None),
+                     "memory": m_q,
+                     "numel": nb * BLOCK})
+
+        f_fn = lambda a, b: ops.trigger_compress_update(  # noqa: E731
+            a, b, jnp.float32(0.0), k_b, lowering=leg)
+        t_f = _time(f_fn, xh.reshape(-1), xe.reshape(-1))
+        m_f = _mem(f_fn, xh.reshape(-1), xe.reshape(-1))
+        q_f, xn_f, _ = f_fn(xh.reshape(-1), xe.reshape(-1))
+        eq_f = _bit_equal((q_f, xn_f), (q_r, xn_r))
+        rows.append({"name": f"kernel_fused_trigger({leg})",
+                     "lowering": leg,
+                     "us_per_call": round(t_f, 1),
+                     "ref_us": round(t_ref, 1),
+                     "bit_equal_oracle": eq_f,
+                     "omega_empirical": round(omega_emp, 4),
+                     "peak_hbm_bytes": (m_f["peak_hbm_bytes"]
+                                        if m_f else None),
+                     "memory": m_f,
+                     "numel": nb * BLOCK})
     return rows
 
 

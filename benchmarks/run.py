@@ -85,7 +85,10 @@ def check_artifacts(dirs) -> int:
     bits-mismatch verdict must never be committed) and a row's charged bits
     must sit inside its stored closed-form oracle interval; every quick row
     from a schema>=3 artifact must carry a finite positive peak_hbm_bytes
-    (the P3 memory watermark). Static — reads JSON only — so a hand-edited
+    (the P3 memory watermark). Kernel rows additionally pin the compiled
+    path: the kernels artifact must contain lowering='xla' rows, no row may
+    store bit_equal_oracle=false, and fused sign_topk must beat the unfused
+    XLA reference on at least one leg. Static — reads JSON only — so a hand-edited
     bits column or a stale artifact fails fast without re-running the
     suites. Returns the number of bad rows."""
     import glob
@@ -123,6 +126,30 @@ def check_artifacts(dirs) -> int:
                         print(f"[check] {path}: row {row.get('name')!r}: "
                               f"peak_hbm_bytes={peak!r} is not a finite "
                               f"positive number")
+                # kernel rows: a leg whose output drifted bit-wise from the
+                # jnp oracle must never be committed
+                if row.get("bit_equal_oracle") is False:
+                    bad += 1
+                    print(f"[check] {path}: row {row.get('name')!r}: "
+                          f"bit_equal_oracle is false — the "
+                          f"{row.get('lowering')!r} leg diverged from "
+                          f"ref.py at the benchmarked shape")
+            if doc.get("suite") == "kernels" and doc.get("rows"):
+                rows = doc["rows"]
+                legs = {r.get("lowering") for r in rows} - {None}
+                if "xla" not in legs:
+                    bad += 1
+                    print(f"[check] {path}: kernels artifact has no "
+                          f"compiled lowering='xla' rows (legs={sorted(legs)})")
+                st = [r for r in rows
+                      if str(r.get("name", "")).startswith("kernel_sign_topk(")]
+                if st and not any(
+                        float(r["us_per_call"]) <= float(r["ref_us"])
+                        for r in st):
+                    bad += 1
+                    print(f"[check] {path}: fused sign_topk is slower than "
+                          f"the unfused XLA reference on EVERY leg: "
+                          f"{[(r['name'], r['us_per_call'], r['ref_us']) for r in st]}")
     print(f"[check] {checked} row(s) checked, {bad} bad")
     return bad
 

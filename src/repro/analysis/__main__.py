@@ -153,6 +153,8 @@ def audit_dist(variant: str, arch: str, use_kernel: bool,
                            use_kernel=use_kernel)
     init_fn, train_step, state_specs, pshape = build_sparq(cfg, mesh, dcfg)
     report.meta["interpret"] = train_step.interpret
+    report.meta["lowering"] = train_step.lowering
+    report.meta["d_pad"] = train_step.d_pad
 
     state_sds = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
     n_nodes, per_node, seq = train_step.n_nodes, 2, 32
@@ -183,6 +185,7 @@ def audit_dist(variant: str, arch: str, use_kernel: bool,
     report.extend(hlo_lint.lint_transfers(hlo, program=report.program))
     report.extend(hlo_lint.lint_pallas(hlo, use_kernel=train_step.use_kernel,
                                        interpret=train_step.interpret,
+                                       lowering=train_step.lowering,
                                        program=report.program))
 
     # R2 on the dist jaxpr + state carry contract ((state, metrics) out).
@@ -220,13 +223,13 @@ def audit_dist(variant: str, arch: str, use_kernel: bool,
             program=report.program)
         report.extend(cf)
         report.meta["contracts"] = cmeta
-        # R10 (dist leg): the engine's charged payload vs the per-leaf
-        # closed-form sum (the kernel path charges blockwise — different
-        # formula by design, certified via the core fixtures instead)
-        if not train_step.use_kernel:
-            report.extend(comm_lint.lint_dist_payload(
-                dcfg.resolved_compressor(), pshape, train_step.payload_bits,
-                program=report.program))
+        # R10 (dist leg): the engine's charged payload vs the flat-buffer
+        # closed-form derivation at d = sum(leaf sizes) — both paths now
+        # compress the single raveled buffer (kernel: blockwise formula via
+        # the BlockTopFrac branch; generic: global top-k on the flat vector)
+        report.extend(comm_lint.lint_dist_payload(
+            dcfg.effective_compressor(), pshape, train_step.payload_bits,
+            program=report.program))
         # R11: node-axis bytes of the compiled module vs the bits model
         f11, m11 = comm_lint.lint_collectives(
             hlo, list(mesh.shape.items()), n_nodes=train_step.n_nodes,

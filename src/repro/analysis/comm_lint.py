@@ -33,8 +33,9 @@ import numpy as np
 
 from repro.analysis.rules import Finding, finding
 from repro.core import bits as bits_mod
-from repro.core.compression import (QSGD, Compressor, Identity, QsTopK, RandK,
-                                    Sign, SignTopK, TopFrac, TopK)
+from repro.core.compression import (QSGD, BlockTopFrac, Compressor, Identity,
+                                    QsTopK, RandK, Sign, SignTopK, TopFrac,
+                                    TopK)
 from repro.core.faults import FaultPlan
 from repro.core.topology import GossipPlan
 
@@ -51,10 +52,22 @@ def _idx_bits(d: int, k: int) -> float:
     return k * math.ceil(math.log2(max(d, 2)))
 
 
+# kernel block width the blockwise operator quantizes over — written out as a
+# literal (not imported from repro.kernels) so a drifted runtime constant
+# cannot certify itself
+_KERNEL_BLOCK = 1024
+
+
 def derive_payload_bits(comp: Compressor, d: int) -> Optional[float]:
     """Closed-form payload bits for one compressed d-vector, or None for a
     compressor outside the registry (nothing to cross-check against)."""
     d = int(d)
+    if isinstance(comp, BlockTopFrac):        # before TopFrac: subclass
+        B = _KERNEL_BLOCK
+        k_b = max(1, min(B, math.ceil(comp.frac * B)))
+        nb = -(-d // B)                       # padded block count
+        # per block: k_b signs + k_b block-local indices + f32 scale
+        return nb * (k_b + _idx_bits(B, k_b) + _F)
     if isinstance(comp, TopFrac):             # before SignTopK: subclass
         k = max(1, math.ceil(comp.frac * d))
         return k + _idx_bits(d, k) + _F       # k signs + k indices + scale
@@ -161,6 +174,7 @@ def lint_bits_oracle(*, program: str, n: int = 8, d: int = 256, T: int = 12
     probes: List[Compressor] = [
         Identity(), TopK(k=10), RandK(k=10), Sign(), QSGD(s=16),
         SignTopK(k=10), QsTopK(k=10, s=16), TopFrac(frac=0.25),
+        BlockTopFrac(frac=0.1),
     ]
     assert len(probes) == len(_REGISTRY)
     for comp in probes:
@@ -213,21 +227,24 @@ def lint_bits_oracle(*, program: str, n: int = 8, d: int = 256, T: int = 12
 def lint_dist_payload(comp: Compressor, pshape: Any, payload_bits: float,
                       *, program: str) -> List[Finding]:
     """R10 (dist leg): the payload the distributed engine charges per
-    triggered node per sync must equal the per-leaf closed-form sum."""
+    triggered node per sync must equal the closed-form derivation over the
+    FLAT model dimension. The dist engine ravels the whole pytree into one
+    contiguous buffer and compresses it as a single d-vector (one global
+    top-k / one blockwise kernel dispatch), so the independent oracle is
+    ``derive_payload_bits(comp, sum(leaf sizes))`` — NOT the per-leaf sum,
+    which differs for frac-style operators (global vs per-tensor selection
+    is a deliberate, pinned semantic change of the flat-buffer path)."""
     import jax
-    want = 0.0
-    for leaf in jax.tree.leaves(pshape):
-        dd = math.prod(leaf.shape) or 1
-        per = derive_payload_bits(comp, dd)
-        if per is None:
-            return []  # custom operator: nothing independent to derive
-        want += per
+    d = sum(math.prod(leaf.shape) or 1 for leaf in jax.tree.leaves(pshape))
+    want = derive_payload_bits(comp, d)
+    if want is None:
+        return []  # custom operator: nothing independent to derive
     out: List[Finding] = []
     if abs(payload_bits - want) > 0.5:
         out.append(finding(
             "R10", f"dist payload drift: engine charges {payload_bits:.1f} "
-                   f"bits/node/sync, per-leaf derivation gives {want:.1f}",
-            program))
+                   f"bits/node/sync, flat-buffer derivation at d={d} gives "
+                   f"{want:.1f}", program))
     return out
 
 

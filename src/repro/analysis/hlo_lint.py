@@ -118,6 +118,7 @@ def lint_transfers(hlo: str, *, program: str = "",
 
 def run_lint(hlo: str, donated_params: Sequence[int] = (), *,
              use_kernel: bool = False, interpret: bool = False,
+             lowering: Optional[str] = None,
              program: str = "") -> dict:
     """``--lint`` entry for the launch drivers: run the HLO-level rules over
     a freshly compiled module, print findings, and return a JSON-able
@@ -127,7 +128,8 @@ def run_lint(hlo: str, donated_params: Sequence[int] = (), *,
 
     from repro.analysis.rules import apply_suppressions, default_suppressions
     findings = lint_module(hlo, donated_params, use_kernel=use_kernel,
-                           interpret=interpret, program=program)
+                           interpret=interpret, lowering=lowering,
+                           program=program)
     apply_suppressions(findings, default_suppressions(jax.default_backend()))
     errors = [f for f in findings
               if f.severity == "error" and not f.suppressed]
@@ -140,6 +142,7 @@ def run_lint(hlo: str, donated_params: Sequence[int] = (), *,
 
 def lint_module(hlo: str, donated_params: Sequence[int] = (), *,
                 use_kernel: bool = False, interpret: bool = False,
+                lowering: Optional[str] = None,
                 threshold_bytes: int = DONATION_THRESHOLD_BYTES,
                 program: str = "") -> List[Finding]:
     """All HLO-level rules (R1, R4, R5) over one compiled module — the
@@ -149,23 +152,33 @@ def lint_module(hlo: str, donated_params: Sequence[int] = (), *,
                         threshold_bytes=threshold_bytes, program=program)
     out += lint_transfers(hlo, program=program)
     out += lint_pallas(hlo, use_kernel=use_kernel, interpret=interpret,
-                       program=program)
+                       lowering=lowering, program=program)
     return out
 
 
 def lint_pallas(hlo: str, *, use_kernel: bool, interpret: bool,
+                lowering: Optional[str] = None,
                 program: str = "") -> List[Finding]:
-    """R5: a ``use_kernel=True`` program must contain a real Pallas custom
-    call (``tpu_custom_call`` / ``__gpu$xla.gpu.triton``); interpret-mode
-    Pallas lowers to plain HLO ops with no kernel call at all, silently
-    simulating the kernel op-by-op."""
+    """R5: a ``use_kernel=True`` program must lower to a COMPILED kernel —
+    either a real Pallas custom call (``tpu_custom_call`` /
+    ``__gpu$xla.gpu.triton``) or the sanctioned compiled XLA leg
+    (``lowering="xla"``: the same blockwise math as one jnp program, compiled
+    by XLA — repro.kernels.resolve_lowering). Interpret-mode Pallas lowers to
+    plain HLO ops with no kernel call at all, silently simulating the kernel
+    op-by-op, and is the one thing this rule rejects. ``lowering=None`` keeps
+    the legacy bool-only contract (no XLA leg sanctioned)."""
     if not use_kernel:
+        return []
+    if lowering == "xla":
+        # compiled leg: XLA compiles the identical blockwise program; there
+        # is rightly no Pallas custom call to find
         return []
     has_kernel_call = ("tpu_custom_call" in hlo
                        or "__gpu$xla.gpu.triton" in hlo
                        or "mosaic" in hlo)
-    if interpret or not has_kernel_call:
-        why = ("builder reports interpret=True" if interpret
+    if interpret or lowering == "interpret" or not has_kernel_call:
+        why = ("builder reports an interpret lowering"
+               if (interpret or lowering == "interpret")
                else "no Pallas custom call in the optimized module")
         return [finding(
             "R5",

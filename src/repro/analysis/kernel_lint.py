@@ -18,14 +18,15 @@ These rules make that class of drift a lint error before any TPU is involved:
   capture without a mask is the broken-fixture case. An un-probed
   ``pallas_call`` site (found by AST scan) is itself a K1 error: new kernels
   must register a probe to land.
-* **K2 interpret-flag-hygiene** — the AST leg flags any hard-coded
-  ``interpret=<bool literal>`` call-site keyword or signature default in
-  src/repro/kernels and src/repro/dist (the flag threads through
-  ``repro.kernels.interpret_default``); the budget leg resolves the flag per
-  registered kernel and reports an "interpret-only lowering" finding when it
-  resolves to interpret mode — suppressed off-TPU by the sanctioned default
-  suppression, a hard error on TPU unless the kernel lowers to a real
-  ``tpu_custom_call``/mosaic/triton custom call.
+* **K2 lowering-flag-hygiene** — the AST leg flags any hard-coded
+  ``interpret=<bool literal>`` or ``lowering=<str literal>`` call-site
+  keyword or signature default in src/repro/kernels and src/repro/dist (the
+  leg must thread through ``repro.kernels.resolve_lowering``); the budget
+  leg resolves the ambient lowering once and reports an "interpret-only
+  lowering" finding per registered kernel only when it resolves to
+  ``"interpret"`` — i.e. no compiled leg exists. Since the compiled XLA leg
+  (``lowering="xla"``) became the off-TPU default this finding no longer
+  fires on CPU, and the old backend-conditional default suppression is gone.
 * **K3 vmem-budget** — closed-form per-invocation VMEM estimate from the
   captured BlockSpecs: (input tiles + output tiles) x 2 (double-buffered
   pipeline) + scratch, vs the 16 MiB/core v5e-class budget.
@@ -179,7 +180,11 @@ def capture_probes(probes: Sequence[Tuple[str, Callable, tuple, dict]]
 def default_probes() -> List[Tuple[str, Callable, tuple, dict]]:
     """The registered probe per public kernel entry: exact-tile block shapes
     AND a non-multiple flat length (5000 -> 5 x 1024 padded) so both the
-    blockwise kernels and the ops.py padding path are captured."""
+    blockwise kernels and the ops.py padding path are captured. Every probe
+    pins ``lowering="pallas"`` — capture runs under ``jax.eval_shape`` so no
+    kernel executes and the Pallas path traces abstractly even on CPU; the
+    ambient default (the compiled XLA leg off-TPU) would otherwise skip the
+    ``pallas_call`` sites entirely and K1 would have nothing to check."""
     import jax
     import jax.numpy as jnp
 
@@ -193,15 +198,19 @@ def default_probes() -> List[Tuple[str, Callable, tuple, dict]]:
     key = sds(2, dtype=jnp.uint32)
     return [
         ("sign_topk_blocks", sign_topk.sign_topk_blocks,
-         (sds(8, B), sds(8, B), sds()), {"k_b": 102}),
+         (sds(8, B), sds(8, B), sds()), {"k_b": 102, "lowering": "pallas"}),
         ("sign_topk_blocks/tall", sign_topk.sign_topk_blocks,
-         (sds(32, B), sds(32, B), sds()), {"k_b": 13}),
+         (sds(32, B), sds(32, B), sds()), {"k_b": 13, "lowering": "pallas"}),
         ("qsgd_blocks", qsgd.qsgd_blocks,
-         (sds(8, B), sds(8, B)), {"s": 16}),
-        ("ops.sign_topk", ops.sign_topk, (sds(5000),), {"k": 128}),
+         (sds(8, B), sds(8, B)), {"s": 16, "lowering": "pallas"}),
+        ("ops.sign_topk", ops.sign_topk, (sds(5000),),
+         {"k": 128, "lowering": "pallas"}),
         ("ops.trigger_compress_update", ops.trigger_compress_update,
-         (sds(5000), sds(5000), sds()), {"k_b": 13}),
-        ("ops.qsgd", ops.qsgd, (sds(5000), key), {"s": 16}),
+         (sds(5000), sds(5000), sds()), {"k_b": 13, "lowering": "pallas"}),
+        ("ops.sign_topk_ensemble", ops.sign_topk_ensemble,
+         (sds(4, 2 * B + 300),), {"k_b": 13, "lowering": "pallas"}),
+        ("ops.qsgd", ops.qsgd, (sds(5000), key),
+         {"s": 16, "lowering": "pallas"}),
     ]
 
 
@@ -342,9 +351,21 @@ def lint_interpret_ast(root: str = ".", *, program: str,
                        dirs: Sequence[str] = ("src/repro/kernels",
                                               "src/repro/dist")
                        ) -> List[Finding]:
-    """K2 (AST leg): no ``interpret=<bool literal>`` call-site keyword and no
-    bool-literal ``interpret`` signature default anywhere in the kernel/dist
-    packages — the flag must thread through interpret_default()."""
+    """K2 (AST leg): no ``interpret=<bool literal>`` and no
+    ``lowering=<str literal>`` call-site keyword or signature default
+    anywhere in the kernel/dist packages — both flags must thread through
+    repro.kernels.resolve_lowering() so env overrides and the per-backend
+    default stay authoritative."""
+
+    def _literal(kwname: str, val) -> Optional[str]:
+        if kwname == "interpret" and isinstance(val, ast.Constant) and \
+                isinstance(val.value, bool):
+            return f"interpret={val.value}"
+        if kwname == "lowering" and isinstance(val, ast.Constant) and \
+                isinstance(val.value, str):
+            return f'lowering="{val.value}"'
+        return None
+
     out: List[Finding] = []
     for d in dirs:
         full = os.path.join(root, d)
@@ -360,14 +381,12 @@ def lint_interpret_ast(root: str = ".", *, program: str,
             for node in ast.walk(tree):
                 if isinstance(node, ast.Call):
                     for kwn in node.keywords:
-                        if kwn.arg == "interpret" and \
-                                isinstance(kwn.value, ast.Constant) and \
-                                isinstance(kwn.value.value, bool):
+                        lit = _literal(kwn.arg or "", kwn.value)
+                        if lit is not None:
                             out.append(finding(
-                                "K2", f"hard-coded interpret="
-                                      f"{kwn.value.value} literal at a call "
+                                "K2", f"hard-coded {lit} literal at a call "
                                       f"site — thread it from "
-                                      f"repro.kernels.interpret_default()",
+                                      f"repro.kernels.resolve_lowering()",
                                 f"{program}:{rel}:{node.lineno}"))
                 elif isinstance(node, (ast.FunctionDef,
                                        ast.AsyncFunctionDef)):
@@ -378,14 +397,13 @@ def lint_interpret_ast(root: str = ".", *, program: str,
                                           - len(args.defaults))
                                 + list(args.defaults) + list(args.kw_defaults))
                     for a, dflt in zip(named, defaults):
-                        if a.arg == "interpret" and \
-                                isinstance(dflt, ast.Constant) and \
-                                isinstance(dflt.value, bool):
+                        lit = _literal(a.arg, dflt)
+                        if lit is not None:
                             out.append(finding(
-                                "K2", f"bool-literal default interpret="
-                                      f"{dflt.value} in {node.name}() "
-                                      f"signature — default must be None, "
-                                      f"resolved via interpret_default()",
+                                "K2", f"literal default {lit} in "
+                                      f"{node.name}() signature — default "
+                                      f"must be None, resolved via "
+                                      f"repro.kernels.resolve_lowering()",
                                 f"{program}:{rel}:{node.lineno}"))
     return out
 
@@ -393,27 +411,29 @@ def lint_interpret_ast(root: str = ".", *, program: str,
 def lint_interpret_budget(captures: Sequence[PallasCapture], *, program: str,
                           backend: str
                           ) -> Tuple[List[Finding], Dict[str, Any]]:
-    """K2 (budget leg): each registered kernel must lower compiled. A capture
-    whose resolved flag is interpret-mode yields the "interpret-only
-    lowering" finding the off-TPU default suppression sanctions; on TPU the
-    compiled lowering must contain a real custom call (checked by R5 on the
-    lowered programs — here the resolved flag itself is the contract)."""
-    from repro.kernels import interpret_default
+    """K2 (budget leg): every registered kernel must have a COMPILED lowering
+    on this backend. The ambient leg is resolved once via
+    ``repro.kernels.resolve_lowering()``: ``"pallas"`` (Mosaic/Triton custom
+    call, audited by R5 on the lowered module) and ``"xla"`` (the identical
+    blockwise math compiled by XLA) both count as compiled; only
+    ``"interpret"`` — the Pallas interpreter simulating the kernel op-by-op —
+    is the finding. Probes pin ``lowering="pallas"`` for K1 capture, so the
+    per-capture flag says nothing about production resolution; the ambient
+    default is the contract."""
+    from repro.kernels import resolve_lowering
 
+    default_leg = resolve_lowering()
+    kernels = sorted({cap.probe.split("/")[0] for cap in captures})
     out: List[Finding] = []
-    seen: Dict[str, bool] = {}
-    for cap in captures:
-        resolved = interpret_default(cap.interpret)
-        kernel = cap.probe.split("/")[0]
-        seen[kernel] = seen.get(kernel, False) or not resolved
-    for kernel, compiled in sorted(seen.items()):
-        if not compiled:
+    if default_leg == "interpret":
+        for kernel in kernels:
             out.append(finding(
                 "K2", f"registered kernel {kernel!r} resolves to an "
                       f"interpret-only lowering on backend {backend!r} "
-                      f"(no compiled custom call)", f"{program}:{kernel}"))
-    return out, {"kernels": {k: ("compiled" if v else "interpret")
-                             for k, v in seen.items()}}
+                      f"(resolve_lowering() -> 'interpret': no compiled "
+                      f"leg)", f"{program}:{kernel}"))
+    return out, {"default_lowering": default_leg,
+                 "kernels": {k: default_leg for k in kernels}}
 
 
 # ----------------------------------------------------------------------- K3

@@ -21,10 +21,11 @@ id, a severity, and a one-line contract, so findings are machine-diffable
   device->host ``copy-start`` inside (or reachable from) a scanned while
   body: any of these serializes the scan on host round trips without failing
   a single numeric test.
-* **R5 interpret-leak** — a ``use_kernel=True`` program must lower to a real
-  Pallas custom call on TPU; interpret-mode Pallas silently simulates the
-  kernel op-by-op (the off-TPU CI fallback, sanctioned there via a documented
-  suppression).
+* **R5 interpret-leak** — a ``use_kernel=True`` program must lower COMPILED:
+  a real Pallas custom call on TPU, or the sanctioned compiled XLA leg
+  (``lowering="xla"``, the identical blockwise math as one jnp program)
+  off-TPU; interpret-mode Pallas silently simulates the kernel op-by-op and
+  is an error on every backend.
 
 The theory-contract / communication passes (analysis/contracts.py and
 analysis/comm_lint.py) lint the *algorithm configuration* rather than the
@@ -70,11 +71,12 @@ lowerings BEFORE the compiled-kernel / large-n PRs land (ROADMAP items 1-2):
   stay in bounds, every element is visited, and a padded tail is either
   masked in the kernel body (``pl.when``) or excluded by an asserted
   divisibility contract in the wrapper.
-* **K2 interpret-flag-hygiene** — the ``interpret=`` flag threads from
-  config/env (``repro.kernels.interpret_default``), never a hard-coded
-  bool literal at a call site or signature default; each registered kernel
-  must lower to a real compiled custom call (tpu_custom_call / mosaic /
-  triton) or carry the documented interpret-only suppression.
+* **K2 lowering-flag-hygiene** — the ``interpret=`` / ``lowering=`` flags
+  thread from config/env (``repro.kernels.resolve_lowering``), never a
+  hard-coded bool/str literal at a call site or signature default; each
+  registered kernel must resolve to a compiled lowering ("pallas" custom
+  call or the "xla" compiled leg) — interpret-only resolution is an error
+  on every backend.
 * **K3 vmem-budget** — a closed-form per-invocation VMEM estimate from the
   captured BlockSpecs (double-buffered input+output tiles plus scratch)
   must stay under the per-backend budget; an over-budget tiling would fail
@@ -165,8 +167,8 @@ RULES: Dict[str, Rule] = {r.rule_id: r for r in (
          "no host callbacks, infeed/outfeed, send/recv or device->host "
          "copy-start inside a scanned while body"),
     Rule("R5", "interpret-leak", ERROR,
-         "use_kernel=True must lower to a compiled Pallas custom call, "
-         "not interpret-mode simulation"),
+         "use_kernel=True must lower compiled (Pallas custom call or the "
+         "sanctioned lowering=\"xla\" leg), not interpret-mode simulation"),
     Rule("R6", "mixing-matrix-contract", ERROR,
          "every gossip round is symmetric, doubly stochastic and "
          "non-negative, delta_eff > 0, and fault-repaired supports stay "
@@ -195,11 +197,11 @@ RULES: Dict[str, Rule] = {r.rule_id: r for r in (
          "every pallas_call site in kernels/ is probed; the captured grid x "
          "BlockSpec tiling covers each operand with in-bounds index maps, "
          "and padded tails are masked (pl.when) or divisibility-asserted"),
-    Rule("K2", "interpret-flag-hygiene", ERROR,
-         "interpret= threads from config/env (no hard-coded bool literal at "
-         "call sites or signature defaults); each registered kernel lowers "
-         "to a compiled custom call or carries the documented "
-         "interpret-only suppression"),
+    Rule("K2", "lowering-flag-hygiene", ERROR,
+         "interpret=/lowering= thread from config/env (no hard-coded "
+         "bool/str literal at call sites or signature defaults); each "
+         "registered kernel resolves to a compiled lowering (pallas custom "
+         "call or the xla leg) on every backend"),
     Rule("K3", "vmem-budget", ERROR,
          "closed-form per-invocation VMEM estimate from BlockSpecs "
          "(double-buffered tiles + scratch) stays under the per-backend "
@@ -364,20 +366,16 @@ def render_report(reports: Iterable[Report],
 
 
 def default_suppressions(backend: str) -> Dict[str, Suppression]:
-    """The repo's sanctioned suppressions: off-TPU backends have no Mosaic
-    compiler, so interpret-mode Pallas is the documented CI fallback there
-    (ROADMAP item 1 tracks real compiled kernels). R5 detects the leak in a
-    lowered program; K2's budget leg certifies each registered kernel and
-    matches only its "interpret-only" lowering findings — the hard-coded
-    literal findings (also K2) stay unsuppressed on every backend."""
-    sup: Dict[str, Suppression] = {}
-    if backend != "tpu":
-        reason = ("off-TPU backend: interpret-mode Pallas is the sanctioned "
-                  "CI fallback (ROADMAP item 1 tracks compiled Mosaic "
-                  "kernels)")
-        sup["R5"] = {"match": "interpret", "reason": reason}
-        sup["K2"] = {"match": "interpret-only", "reason": reason}
-    return sup
+    """The repo's sanctioned suppressions: none. Off-TPU backends now default
+    to the COMPILED XLA leg (``repro.kernels.resolve_lowering() -> "xla"``:
+    the identical blockwise math compiled by XLA, bit-equal to the Pallas
+    interpreter and pinned so in tests), so the old interpret-mode CI
+    fallback — and the R5/K2 "interpret-only" suppressions that sanctioned
+    it — are gone. An interpret-only lowering is now a hard error on every
+    backend; forcing REPRO_KERNEL_LOWERING=interpret is a debugging posture,
+    not a shippable configuration."""
+    del backend  # every backend has a compiled leg now
+    return {}
 
 
 def dump_report(doc: Dict[str, object], path: str) -> None:

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bits as bits_mod
+from repro.kernels.sign_topk import BLOCK, _block_compress
 
 
 @dataclasses.dataclass(frozen=True)
@@ -290,6 +291,43 @@ class TopFrac(SignTopK):
         return bits_mod.signtopk_bits(d, self._k(d))
 
 
+@dataclasses.dataclass(frozen=True)
+class BlockTopFrac(TopFrac):
+    """Blockwise EXACT-k SignTopK over BLOCK=1024 tiles — the kernel seam.
+
+    The flat vector is zero-padded to whole 1024-element tiles and each tile
+    keeps its own exact k_b = ceil(frac * BLOCK) support with a per-tile
+    scale (the same `_block_compress` math the fused Pallas/XLA kernels run),
+    so one `kernels.ops.sign_topk_ensemble` dispatch over a stacked (n, D_pad)
+    buffer is BIT-IDENTICAL to vmapping this operator over the node axis.
+    Zero lanes are never selected, so padding emits nothing.
+
+    omega: like TopFrac this is an ISOTROPIC PROXY (adversarial worst case is
+    1/BLOCK), evaluated per tile: k_b/BLOCK capped at 2/pi (frac -> 1 is full
+    sign quantization). Deterministic; ignores the key."""
+
+    name: str = "signtopk_block"
+
+    def _k_b(self) -> int:
+        return max(1, min(BLOCK, int(math.ceil(self.frac * BLOCK))))
+
+    def __call__(self, x: jax.Array, key: Optional[jax.Array] = None) -> jax.Array:
+        d = x.shape[-1]
+        nb = max(1, -(-d // BLOCK))
+        xp = jnp.pad(x, (0, nb * BLOCK - d)).reshape(nb, BLOCK)
+        q, _ = _block_compress(xp.astype(jnp.float32), jnp.float32(1.0),
+                               self._k_b())
+        return q.astype(x.dtype).reshape(-1)[:d]
+
+    def omega(self, d: int) -> float:
+        return min(self._k_b() / BLOCK, 2.0 / math.pi)
+
+    def bits(self, d: int) -> float:
+        # per tile: k_b values' worth of sign+index plus the shared scale
+        nb = max(1, -(-int(d) // BLOCK))
+        return nb * bits_mod.signtopk_bits(BLOCK, self._k_b())
+
+
 def compress_tree(comp: Compressor, tree: Any,
                   key: Optional[jax.Array] = None) -> Any:
     """Per-tensor compression of a pytree (paper Section 5.2).
@@ -301,10 +339,14 @@ def compress_tree(comp: Compressor, tree: Any,
     node axis of its stacked parameter tree.
     """
     leaves, treedef = jax.tree.flatten(tree)
+    if not leaves:
+        # zero-leaf tree: nothing to compress; splitting a key here would
+        # desync the strict zip below (1 key vs 0 leaves)
+        return tree
     if key is None:
         keys = [None] * len(leaves)
     else:
-        keys = list(jax.random.split(key, max(len(leaves), 1)))
+        keys = list(jax.random.split(key, len(leaves)))
     out = [comp(leaf.reshape(-1), k).reshape(leaf.shape)
            for leaf, k in zip(leaves, keys, strict=True)]
     return jax.tree.unflatten(treedef, out)
@@ -325,6 +367,7 @@ _REGISTRY = {
     "signtopk": SignTopK,
     "qstopk": QsTopK,
     "signtop_frac": TopFrac,
+    "signtopk_block": BlockTopFrac,
 }
 
 

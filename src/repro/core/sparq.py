@@ -34,11 +34,12 @@ import numpy as np
 
 from repro.core import bits as bits_mod
 from repro.core import engine
-from repro.core.compression import Compressor, Identity
+from repro.core.compression import BlockTopFrac, Compressor, Identity
 from repro.core.faults import FaultPlan, resolve_faults
 from repro.core.schedule import LRSchedule, fixed
 from repro.core.topology import GossipPlan, Topology
 from repro.core.triggers import ThresholdSchedule, zero
+from repro.kernels import ops as kernel_ops
 from repro.optim.sgd import Optimizer, momentum as momentum_opt, resolve_optimizer
 
 GradFn = Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
@@ -228,8 +229,14 @@ def make_step(cfg: SparqConfig, grad_fn: GradFn
                 # nodes muted, bits charged for live links only
                 W_r, deg_r, live = flt.apply(W_r, state.t, state.sync_rounds)
                 trig = trig & live
-            keys = jax.random.split(kc, n)
-            q = jax.vmap(lambda v, k: comp(v, k))(diff, keys)
+            if isinstance(comp, BlockTopFrac):
+                # kernel seam: ONE fused blockwise dispatch over the whole
+                # (n, d) ensemble (kernels/ops.py; bit-identical to vmapping
+                # the operator row-by-row — tests/test_kernels.py pins it)
+                q = kernel_ops.sign_topk_ensemble(diff, comp._k_b())
+            else:
+                keys = jax.random.split(kc, n)
+                q = jax.vmap(lambda v, k: comp(v, k))(diff, keys)
             q = q * trig[:, None].astype(q.dtype)             # line 11: send 0
             x_hat_new = state.x_hat + q                       # line 13
             x_new = x_half + gamma * gossip_mix(W_r, x_hat_new)  # line 15

@@ -1,4 +1,4 @@
-"""Blockwise QSGD stochastic-quantizer Pallas kernel.
+"""Blockwise QSGD stochastic-quantizer kernel with a compiled XLA leg.
 
 Q_s over 1024-element VMEM tiles: per tile, ||x||_2 is a row reduction on the
 8x128 vreg layout; levels are computed and stochastically rounded with uniform
@@ -15,31 +15,40 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels import interpret_default
+from repro.kernels import resolve_lowering
 
 BLOCK = 1024
 BLOCK_ROWS = 8
 
 
-def _qsgd_kernel(x_ref, u_ref, out_ref, *, s: int):
-    x = x_ref[...].astype(jnp.float32)
-    u = u_ref[...].astype(jnp.float32)
+def _qsgd_rows(x: jax.Array, u: jax.Array, s: int) -> jax.Array:
+    """Shared per-row Q_s math on f32 rows (kernel body == XLA leg)."""
     norm = jnp.sqrt(jnp.sum(x * x, axis=1, keepdims=True))
     safe = jnp.where(norm > 0, norm, 1.0)
     level = jnp.abs(x) / safe * s
     low = jnp.floor(level)
     q = (low + (u < (level - low)).astype(jnp.float32)) / s
-    out_ref[...] = (norm * jnp.sign(x) * q).astype(out_ref.dtype)
+    return norm * jnp.sign(x) * q
 
 
-@functools.partial(jax.jit, static_argnames=("s", "interpret"))
+def _qsgd_kernel(x_ref, u_ref, out_ref, *, s: int):
+    x = x_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    out_ref[...] = _qsgd_rows(x, u, s).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "interpret", "lowering"))
 def qsgd_blocks(x: jax.Array, u: jax.Array, s: int = 16,
-                interpret: Optional[bool] = None) -> jax.Array:
+                interpret: Optional[bool] = None,
+                lowering: Optional[str] = None) -> jax.Array:
     """x, u: (n_blocks, BLOCK). Returns quantized x (same shape/dtype).
-    ``interpret=None`` resolves via repro.kernels.interpret_default."""
-    interpret = interpret_default(interpret)
+    ``lowering=None`` resolves via repro.kernels.resolve_lowering."""
+    lw = resolve_lowering(lowering, interpret)
     n, b = x.shape
     assert b == BLOCK
+    if lw == "xla":
+        return _qsgd_rows(x.astype(jnp.float32),
+                          u.astype(jnp.float32), s).astype(x.dtype)
     rows = min(BLOCK_ROWS, n)
     assert n % rows == 0
     return pl.pallas_call(
@@ -49,5 +58,5 @@ def qsgd_blocks(x: jax.Array, u: jax.Array, s: int = 16,
                   pl.BlockSpec((rows, BLOCK), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((rows, BLOCK), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n, BLOCK), x.dtype),
-        interpret=interpret,
+        interpret=(lw == "interpret"),
     )(x, u)

@@ -33,31 +33,41 @@ def sqdiff_partials_ref(x: jax.Array, y: jax.Array, block: int = BLOCK
 def sign_topk_ref(x_half: jax.Array, x_hat: jax.Array, trig: jax.Array,
                   k_b: int, block: int = BLOCK
                   ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Fused blockwise SignTopK of diff = x_half - x_hat, gated by trig.
+    """Fused blockwise EXACT-k SignTopK of diff = x_half - x_hat, gated by trig.
 
-    Per block b: threshold = k_b-th largest |diff|; support = {|diff| >= thr}
-    (ties at the threshold keep EVERY tied element — |support| >= k_b);
-    scale_b = selected mass / |support|; q = trig * scale_b * sign(diff) on the
-    support; x_hat_new = x_hat + q. This is exactly the kernel's semantics
-    (threshold compare is branch-free on the VPU; under bf16 ties are common).
+    Per block b: the support is exactly ``jax.lax.top_k(|diff|, k_b)``'s index
+    set (every entry strictly above the k_b-th largest, then LOWEST-index ties
+    at the threshold until exactly k_b are chosen) restricted to NONZERO lanes
+    — so |support| <= k_b always and zero-padded tails emit nothing;
+    scale_b = selected mass / |support|; q = trig * scale_b * sign(diff) on
+    the support; x_hat_new = x_hat + q. This is exactly the kernel's semantics
+    (same f32 expressions per row — bit-identical on every lowering).
     Returns (q, x_hat_new, vals (n,k_b), idx (n,k_b) block-local int32) — the
-    compact payload keeps the first k_b support entries (top_k order).
+    payload gathers VALUES from the dense q at the top_k indices, so surplus
+    slots (sub-k_b support) carry explicit zeros and scatter(vals, idx)
+    reconstructs q exactly.
     """
     n = x_half.shape[0] // block
     diff = (x_half.astype(jnp.float32)
             - x_hat.astype(jnp.float32)).reshape(n, block)
     av = jnp.abs(diff)
+    pos = av > 0.0
     top_vals, top_idx = jax.lax.top_k(av, k_b)                 # (n, k_b)
     thr = top_vals[:, -1:]                                     # (n, 1)
-    mask = (av >= thr).astype(jnp.float32)
-    nsel = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
-    scale = jnp.sum(av * mask, axis=1, keepdims=True) / nsel   # (n, 1)
+    gt = jnp.logical_and(av > thr, pos)
+    tie = jnp.logical_and(jnp.logical_and(av >= thr,
+                                          jnp.logical_not(gt)), pos)
+    quota = k_b - jnp.sum(gt.astype(jnp.int32), axis=1, keepdims=True)
+    rank = jnp.cumsum(tie.astype(jnp.int32), axis=1)
+    mask = jnp.logical_or(gt, jnp.logical_and(tie, rank <= quota))
+    nsel = jnp.sum(mask.astype(jnp.float32), axis=1, keepdims=True)
+    scale = (jnp.sum(jnp.where(mask, av, 0.0), axis=1, keepdims=True)
+             / jnp.maximum(nsel, 1.0))                         # (n, 1)
     signs = jnp.where(diff >= 0, 1.0, -1.0)
     t = trig.astype(jnp.float32)
-    q = (t * scale * signs * mask).astype(x_half.dtype)
+    q = jnp.where(mask, t * scale * signs, 0.0).astype(x_half.dtype)
     x_hat_new = x_hat + q.reshape(-1)
-    sel_signs = jnp.take_along_axis(signs, top_idx, axis=1)
-    vals = (t * scale * sel_signs).astype(x_half.dtype)
+    vals = jnp.take_along_axis(q, top_idx, axis=1)
     return q.reshape(-1), x_hat_new, vals, top_idx.astype(jnp.int32)
 
 

@@ -183,6 +183,7 @@ def dryrun_train(cfg: ModelConfig, shape: InputShape, prod_mesh,
             donated_params=range(len(jax.tree.leaves(state_sds))),
             use_kernel=train_step.use_kernel,
             interpret=train_step.interpret,
+            lowering=train_step.lowering,
             program=f"dryrun_train[{cfg.arch_id}]")
         # theory-contract leg (R6-R9 + R11) over the same config and module
         from repro.analysis.contracts import run_contract_lint

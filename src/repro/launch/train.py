@@ -235,6 +235,7 @@ def main() -> int:
             hlo, donated_params=range(len(jax.tree.leaves(state))),
             use_kernel=train_step.use_kernel,
             interpret=train_step.interpret,
+            lowering=train_step.lowering,
             program=f"train[{cfg.arch_id}]")
         # theory-contract leg (R6-R9) on the exact config being launched,
         # plus the uncharged-collective walk (R11) over the same module

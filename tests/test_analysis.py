@@ -285,10 +285,24 @@ def test_suppression_match_form_is_selective():
     assert fs[0].suppressed and not fs[1].suppressed
 
 
-def test_default_suppressions_follow_backend():
-    assert "R5" in default_suppressions("cpu")
-    assert "R5" in default_suppressions("gpu")
-    assert default_suppressions("tpu") == {}
+def test_default_suppressions_empty_on_every_backend():
+    # the compiled XLA leg is the sanctioned off-TPU lowering now, so no
+    # backend ships a default waiver: interpret-only findings are hard errors
+    for backend in ("cpu", "gpu", "tpu"):
+        assert default_suppressions(backend) == {}
+
+
+def test_r5_silent_on_sanctioned_xla_leg():
+    # lowering="xla" is a compiled leg with deliberately no custom call —
+    # R5's no-Pallas-custom-call check does not apply to it
+    assert hlo_lint.lint_pallas("ENTRY e { ROOT a = f32[] add(b, c) }",
+                                use_kernel=True, interpret=False,
+                                lowering="xla") == []
+    # ... but the interpreter is still flagged when named explicitly
+    out = hlo_lint.lint_pallas("ENTRY e { ROOT a = f32[] add(b, c) }",
+                               use_kernel=True, interpret=False,
+                               lowering="interpret")
+    assert len(out) == 1 and out[0].rule_id == "R5"
 
 
 def test_report_ok_tracks_unsuppressed_errors():
@@ -302,7 +316,8 @@ def test_report_ok_tracks_unsuppressed_errors():
 def test_render_report_document_shape():
     r = Report(program="p", meta={"backend": "cpu"})
     r.extend([finding("R5", "interpret-mode leak")])
-    sup = default_suppressions("cpu")
+    # defaults are {} on every backend now — waivers must be explicit
+    sup = {"R5": "test waiver: fixture exercises the suppressed rendering"}
     apply_suppressions(r.findings, sup)
     doc = render_report([r], sup, extra={"jax_version": jax.__version__})
     assert doc["ok"] and doc["schema_version"] == 4
@@ -320,8 +335,9 @@ def test_run_lint_counts_unsuppressed_errors_only(capsys):
                         donate=(0,))
     res = hlo_lint.run_lint(hlo, donated_params=[0], use_kernel=True,
                             interpret=True, program="fixture")
-    # R1 counts; the R5 interpret finding is auto-suppressed off-TPU
-    assert res["errors"] == 1
+    # BOTH R1 and the R5 interpret finding count: default_suppressions is
+    # empty on every backend now, so interpret-only is a hard error on CPU
+    assert res["errors"] == 2
     ids = {f["rule_id"]: f["suppressed"] for f in res["findings"]}
-    assert ids["R1"] is False and ids["R5"] is True
+    assert ids["R1"] is False and ids["R5"] is False
     assert "[lint R1/ERROR]" in capsys.readouterr().out

@@ -9,7 +9,8 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import bits as bits_mod
-from repro.core.compression import (_REGISTRY, SignTopK, TopFrac, TopK,
+from repro.core.compression import (_REGISTRY, BlockTopFrac, SignTopK,
+                                    TopFrac, TopK, compress_tree,
                                     make_compressor)
 
 
@@ -65,6 +66,33 @@ def test_topfrac_k_and_bits_consistent(d, frac):
     # support size == k on distinct-magnitude inputs
     x = jnp.linspace(1.0, 2.0, d)
     assert int(jnp.sum(c(x) != 0)) == k
+
+
+def test_compress_tree_empty_pytree_is_identity():
+    """Regression: a zero-leaf tree made jax.random.split(key, 0) feed a
+    strict zip of 1 key against 0 leaves and compress_tree crashed. It must
+    hand the tree back untouched for every container shape of 'empty'."""
+    comp = make_compressor("signtopk", k=4)
+    key = jax.random.PRNGKey(0)
+    for empty in ({}, [], (), {"a": {}, "b": []}, None):
+        assert compress_tree(comp, empty, key) == empty
+    assert compress_tree(comp, {}, None) == {}
+
+
+def test_blocktopfrac_matches_topfrac_within_one_tile():
+    """For d <= 1024 and frac*BLOCK selecting >= d lanes... the tile rule
+    differs: k_b is ceil(frac*1024) regardless of d, so compare against
+    TopFrac at the equivalent per-tile k on a single-tile input."""
+    d, frac = 1000, 0.1
+    c = BlockTopFrac(frac=frac)
+    x = jnp.linspace(1.0, 2.0, d)
+    q = c(x, jax.random.PRNGKey(0))
+    assert q.shape == (d,)
+    assert int(jnp.sum(q != 0)) == c._k_b()  # 103 survivors, padding silent
+    # bits: per-tile payload times the tile count, NOT signtopk_bits(d, k)
+    nb = -(-d // 1024)
+    assert c.bits(d) == nb * bits_mod.signtopk_bits(1024, c._k_b())
+    assert c.bits(3000) == 3 * bits_mod.signtopk_bits(1024, c._k_b())
 
 
 @pytest.mark.parametrize("cls", [TopK, SignTopK])

@@ -166,14 +166,18 @@ def test_r10_bits_oracle_matches_reference_engine_exactly():
         fx = meta["fixtures"][name]
         assert fx["trace"]["bits"] == fx["oracle"]["bits"]
         assert fx["trace"]["triggers"] == fx["oracle"]["triggers"]
-    assert meta["payload_checks"] == 24
+    assert meta["payload_checks"] == 27
 
 
 def test_r10_dist_payload_drift_fires():
     pshape = {"w": jax.ShapeDtypeStruct((32,), jnp.float32),
               "b": jax.ShapeDtypeStruct((8,), jnp.float32)}
     comp = SignTopK(k=10)
-    want = sum(comm_lint.derive_payload_bits(comp, d) for d in (32, 8))
+    # flat-buffer engine: ONE payload over the raveled d=40 buffer, not a
+    # per-leaf sum — the per-leaf total (2 payloads, 2 index widths) differs
+    want = comm_lint.derive_payload_bits(comp, 40)
+    assert want != sum(comm_lint.derive_payload_bits(comp, d)
+                       for d in (32, 8))
     assert comm_lint.lint_dist_payload(comp, pshape, want, program="t") == []
     out = comm_lint.lint_dist_payload(comp, pshape, want + 17.0, program="t")
     assert _ids(out) == ["R10"] and "drift" in out[0].message

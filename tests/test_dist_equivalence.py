@@ -1,12 +1,14 @@
 """The dist engine must match the core/sparq.py reference leaf-for-leaf.
 
 Same communication plan (static ring/expander/torus or a time-varying
-matchings plan), same compressor (per-tensor SignTopK via compress_tree),
-same trigger schedule, same LR/gamma/H, same per-node batches: the node-stacked
-pytree engine (dist/sparq_dist.py) and the dense (n, d) matrix engine
-(core/sparq.py, wired through the identical compress_tree primitive with a
-ravel/unravel adapter) must produce the same parameters, trigger counts and
-bit totals within float tolerance."""
+matchings plan), same compressor (GLOBAL flat-buffer TopFrac, or the
+blockwise BlockTopFrac registry operator on the kernel path), same trigger
+schedule, same LR/gamma/H, same per-node batches: the flat-buffer engine
+(dist/sparq_dist.py, params raveled once into one (n, D_pad) buffer) and the
+dense (n, d) matrix engine (core/sparq.py over the same ravelled vector)
+must produce the same parameters, trigger counts and bit totals within
+float tolerance. The deliberate global-vs-per-tensor top-k semantic change
+of the flat-buffer path is pinned separately below."""
 import dataclasses
 
 import jax
@@ -16,7 +18,8 @@ import pytest
 from jax.flatten_util import ravel_pytree
 
 from repro.configs.registry import get_config
-from repro.core.compression import TopFrac, compress_tree, tree_payload_bits
+from repro.core.compression import (BlockTopFrac, TopFrac, compress_tree,
+                                    tree_payload_bits)
 from repro.core.faults import DropoutWindow, FaultPlan
 from repro.core.schedule import fixed
 from repro.core.sparq import SparqConfig, gossip_mix, init_state, make_step
@@ -43,24 +46,6 @@ def _setup():
     return cfg, mesh, batch
 
 
-class _TreeCompressor:
-    """Reference-engine adapter: per-tensor compression of the flat vector
-    through the same compress_tree primitive the dist engine uses."""
-
-    def __init__(self, comp, unravel, pshape):
-        self.comp, self.unravel, self.pshape = comp, unravel, pshape
-        self.deterministic = comp.deterministic
-
-    def __call__(self, v, key=None):
-        return ravel_pytree(compress_tree(self.comp, self.unravel(v)))[0]
-
-    def bits(self, d):
-        return tree_payload_bits(self.comp, self.pshape)
-
-    def omega(self, d):
-        return self.comp.omega(d)
-
-
 def _run_both(cfg, mesh, batch, threshold, H, beta, dist_kw, ref_kw):
     """Run T steps on both engines with identical knobs; return
     (dist_state, ref_state, dist_flat_params)."""
@@ -75,10 +60,12 @@ def _run_both(cfg, mesh, batch, threshold, H, beta, dist_kw, ref_kw):
     for _ in range(T):
         state, _ = step(state, batch)
 
-    # reference (n, d) engine over the ravelled pytree, same inputs
+    # reference (n, d) engine over the ravelled pytree, same inputs; the
+    # SAME registry operator the dist engine resolves (global TopFrac on
+    # the flat vector; BlockTopFrac on the kernel path)
     p0 = init_params(cfg, jax.random.PRNGKey(0))
     x0, unravel = ravel_pytree(p0)
-    comp = _TreeCompressor(TopFrac(frac=frac), unravel, pshape)
+    comp = dcfg.effective_compressor()
 
     def grad_fn(x_nd, t, key):
         def g1(xv, tok, lab):
@@ -94,7 +81,7 @@ def _run_both(cfg, mesh, batch, threshold, H, beta, dist_kw, ref_kw):
     for t in range(T):
         rstate = rstep(rstate, jax.random.PRNGKey(t))
 
-    dist_flat = jax.vmap(lambda tr: ravel_pytree(tr)[0])(state["params"])
+    dist_flat = state["params"][:, :x0.size]   # drop the zero padded tail
     return state, rstate, dist_flat
 
 
@@ -253,3 +240,64 @@ def test_trigger_prunes_dist_communication():
     assert out["on"][1] == 0 and out["off"][1] > 0
     # two sync rounds of flag-only messages: n nodes * deg 2 * 1 bit each
     assert out["on"][0] == pytest.approx(2 * N * 2 * 1.0)
+
+
+@pytest.mark.parametrize("threshold,beta",
+                         [(zero(), 0.0), (zero(), 0.9),
+                          (constant(1e12), 0.0)],
+                         ids=["always-trigger", "momentum-0.9",
+                              "never-trigger"])
+def test_dist_kernel_path_matches_reference(threshold, beta):
+    """use_kernel=True: ONE fused blockwise dispatch over the whole (n, D_pad)
+    ensemble per sync must equal the reference engine running the registry
+    ``signtopk_block`` operator on the same flat vectors — params, triggers,
+    sync rounds AND charged bits (the blockwise payload formula)."""
+    cfg, mesh, batch = _setup()
+    _assert_equal(*_run_both(cfg, mesh, batch, threshold, 2, beta,
+                             {"use_kernel": True},
+                             {"topology": make_topology("ring", N)}))
+
+
+def test_flat_global_selection_differs_from_per_tensor():
+    """The flat-buffer engine deliberately selects top-frac GLOBALLY over the
+    raveled buffer, not per tensor (the pre-flat dist engine's semantics).
+    Pin the divergence on a two-leaf tree with wildly different leaf scales:
+    global selection spends the whole budget on the large leaf, per-tensor
+    selection reserves support in the small one — and the payload formulas
+    differ too. This is the documented semantic change of the refactor, not
+    an accident to be 'fixed'."""
+    tree = {"big": jnp.full((64,), 100.0), "small": jnp.full((32,), 0.01)}
+    flat, _ = ravel_pytree(tree)
+    comp = TopFrac(frac=0.25)
+    q_global = comp(flat, jax.random.PRNGKey(0))
+    q_per = ravel_pytree(compress_tree(comp, tree, jax.random.PRNGKey(0)))[0]
+    # ravel_pytree orders dict keys alphabetically: big then small
+    small_slice = slice(64, 96)
+    assert int(jnp.sum(q_global[small_slice] != 0)) == 0
+    assert int(jnp.sum(q_per[small_slice] != 0)) == 8   # ceil(.25 * 32)
+    assert not np.array_equal(np.asarray(q_global), np.asarray(q_per))
+    # payload formulas differ too (leaf sizes chosen so the per-leaf index
+    # widths differ from the global one: 64 = 40 + 24)
+    pshape = {"a": jax.ShapeDtypeStruct((40,), jnp.float32),
+              "b": jax.ShapeDtypeStruct((24,), jnp.float32)}
+    assert float(comp.bits(64)) != float(tree_payload_bits(comp, pshape))
+
+
+def test_dist_padded_tail_stays_zero():
+    """The flat buffer's padding lanes [D, D_pad) must stay exactly zero in
+    params and x_hat through real training steps — the loss never reads
+    them, the exact-k kernel never selects them, and the mixing is linear."""
+    cfg, mesh, batch = _setup()
+    for use_kernel in (False, True):
+        dcfg = DistSparqConfig(H=2, variant="dense", frac=0.25,
+                               threshold=zero(), lr=fixed(0.05), gamma=0.3,
+                               use_kernel=use_kernel)
+        init_fn, train_step, _, pshape = build_sparq(cfg, mesh, dcfg)
+        D = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(pshape))
+        assert train_step.d_pad >= D and train_step.d_pad % 1024 == 0
+        state = init_fn(jax.random.PRNGKey(0))
+        step = jax.jit(train_step)
+        for _ in range(T):
+            state, _ = step(state, batch)
+        assert not np.any(np.asarray(state["params"][:, D:]))
+        assert not np.any(np.asarray(state["x_hat"][:, D:]))

@@ -106,13 +106,19 @@ BROKEN_SRC = textwrap.dedent("""
 
     def run(x, interpret=False):
         return x
+
+    def launch2(x):
+        return run2(x, lowering="interpret")
+
+    def run2(x, lowering="xla"):
+        return x
 """)
 
 CLEAN_SRC = textwrap.dedent("""
-    def launch(x, interpret=None):
-        return run(x, interpret=interpret)
+    def launch(x, interpret=None, lowering=None):
+        return run(x, interpret=interpret, lowering=lowering)
 
-    def run(x, interpret=None):
+    def run(x, interpret=None, lowering=None):
         return x
 """)
 
@@ -124,10 +130,13 @@ def test_k2_ast_literal_fires_and_none_default_passes(tmp_path):
     (pkg / "clean.py").write_text(CLEAN_SRC)
     out = kernel_lint.lint_interpret_ast(str(tmp_path), program="t",
                                          dirs=("pkg",))
-    assert len(out) == 2
+    assert len(out) == 4
     msgs = " | ".join(f.message for f in out)
-    assert "hard-coded interpret=True" in msgs
-    assert "bool-literal default interpret=False" in msgs
+    assert "hard-coded interpret=True literal at a call site" in msgs
+    assert "literal default interpret=False in run() signature" in msgs
+    assert 'hard-coded lowering="interpret" literal at a call site' in msgs
+    assert 'literal default lowering="xla" in run2() signature' in msgs
+    assert all("resolve_lowering" in f.message for f in out)
     assert all("broken.py" in f.location for f in out)
 
 
@@ -142,31 +151,31 @@ def _budget_capture(interpret):
         interpret=interpret, scratch_bytes=0)
 
 
-def test_k2_budget_interpret_only_fires_and_is_suppressed_off_tpu():
+def test_k2_budget_interpret_only_fires_unsuppressed(monkeypatch):
+    # force the ambient lowering to the interpreter: this is the ONLY state
+    # the budget leg flags, and — the compiled XLA leg being the off-TPU
+    # default now — it is a hard error with no default suppression anywhere
+    monkeypatch.setenv("REPRO_KERNEL_LOWERING", "interpret")
     out, meta = kernel_lint.lint_interpret_budget(
         [_budget_capture(True)], program="t", backend="cpu")
     assert len(out) == 1 and "interpret-only" in out[0].message
+    assert meta["default_lowering"] == "interpret"
     assert meta["kernels"] == {"fake_kernel": "interpret"}
-    # the sanctioned off-TPU default suppression catches EXACTLY this
-    # message form; the AST-leg "hard-coded interpret=" findings never match
     apply_suppressions(out, default_suppressions("cpu"))
-    assert out[0].suppressed
-    ast_out = kernel_lint.lint_interpret_ast(".", program="t",
-                                             dirs=("src/repro/kernels",))
-    # (committed tree is clean — craft one to check the non-match)
-    from repro.analysis.rules import finding
-    f = finding("K2", "hard-coded interpret=True literal at a call site",
-                "t:x.py:1")
-    apply_suppressions([f], default_suppressions("cpu"))
-    assert not f.suppressed
-    assert ast_out == []
+    assert not out[0].suppressed
 
 
-def test_k2_budget_compiled_flag_passes():
+def test_k2_budget_compiled_default_passes(monkeypatch):
+    # default resolution off-TPU is the compiled XLA leg — no finding, and
+    # the per-capture interpret flag (probes pin the pallas leg for K1) has
+    # no bearing on the ambient resolution the budget leg reports
+    monkeypatch.delenv("REPRO_KERNEL_LOWERING", raising=False)
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
     out, meta = kernel_lint.lint_interpret_budget(
-        [_budget_capture(False)], program="t", backend="tpu")
+        [_budget_capture(True)], program="t", backend="cpu")
     assert out == []
-    assert meta["kernels"] == {"fake_kernel": "compiled"}
+    assert meta["default_lowering"] == "xla"
+    assert meta["kernels"] == {"fake_kernel": "xla"}
 
 
 # ------------------------------------------------------------------ K3

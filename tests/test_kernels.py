@@ -146,3 +146,152 @@ def test_xhat_update_closes_the_loop():
     # strict=False is deliberate: consecutive-pairs idiom — errs[1:] is one
     # shorter than errs by construction, the zip stops at the short side.
     assert all(b <= a + 1e-6 for a, b in zip(errs, errs[1:], strict=False))
+
+
+# --------------------------------------------------- compiled-lowering legs
+
+LEGS = ("interpret", "xla")
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sign_topk_legs_bit_equal_to_oracle(dtype):
+    """The compiled XLA leg and the Pallas interpreter run the IDENTICAL
+    per-row f32 block math, so all three (interpret, xla, ref.py) must be
+    BIT-equal — not close — for q, x_hat_new and the scales, f32 and bf16."""
+    key = jax.random.PRNGKey(11)
+    xh = jax.random.normal(key, (8, BLOCK), dtype)
+    xe = 0.3 * jax.random.normal(jax.random.fold_in(key, 1), (8, BLOCK), dtype)
+    q_r, xn_r, _, _ = ref.sign_topk_ref(xh.reshape(-1), xe.reshape(-1),
+                                        jnp.float32(1.0), 102)
+    for leg in LEGS:
+        q, xn, sc = sign_topk_blocks(xh, xe, jnp.float32(1.0), 102,
+                                     lowering=leg)
+        np.testing.assert_array_equal(np.asarray(q.reshape(-1)),
+                                      np.asarray(q_r.astype(dtype)))
+        np.testing.assert_array_equal(np.asarray(xn.reshape(-1)),
+                                      np.asarray(xn_r.astype(dtype)))
+        assert sc.dtype == jnp.float32
+
+
+def test_qsgd_legs_bit_equal_to_oracle():
+    key = jax.random.PRNGKey(13)
+    x = jax.random.normal(key, (4, BLOCK))
+    u = jax.random.uniform(jax.random.fold_in(key, 1), (4, BLOCK))
+    want = np.asarray(ref.qsgd_ref(x.reshape(-1), u.reshape(-1), 16))
+    for leg in LEGS:
+        got = qsgd_blocks(x, u, s=16, lowering=leg)
+        np.testing.assert_array_equal(np.asarray(got.reshape(-1)), want)
+
+
+def test_payload_reconstructs_exactly_under_ties():
+    """Regression (tie-truncated payload): with constant |diff| every lane
+    ties at the threshold, the exact-k rule keeps the k lowest-index lanes
+    per tile, and scatter(vals, idx) must rebuild q EXACTLY — the old
+    globally-sorted payload dropped tied entries and reconstruction lost
+    mass silently."""
+    d, k = 2048, 256
+    signs = jnp.where(jnp.arange(d) % 3 == 0, 1.0, -1.0)
+    flat = 7.0 * signs          # every |entry| identical: maximal tie stress
+    for leg in LEGS:
+        q, vals, idx = ops.sign_topk(flat, k, lowering=leg)
+        assert vals.shape == idx.shape == (2 * (k // 2),)
+        rebuilt = jnp.zeros((2 * BLOCK,), q.dtype).at[idx].set(vals)[:d]
+        np.testing.assert_array_equal(np.asarray(rebuilt), np.asarray(q))
+        assert int(jnp.sum(q != 0)) == k   # exact-k, ties broken by index
+
+
+def test_payload_reconstructs_on_random_irregular_lengths():
+    for seed, (d, k) in enumerate([(1, 1), (1023, 100), (1025, 64),
+                                   (2500, 250), (3089, 123)]):
+        flat = jax.random.normal(jax.random.PRNGKey(seed), (d,))
+        q, vals, idx = ops.sign_topk(flat, k)
+        nb = max(1, -(-d // BLOCK))
+        rebuilt = jnp.zeros((nb * BLOCK,), q.dtype).at[idx].set(vals)[:d]
+        np.testing.assert_array_equal(np.asarray(rebuilt), np.asarray(q))
+
+
+def test_padded_tail_tile_emits_zero():
+    """Regression (padded tail): at non-multiple-of-1024 lengths the last
+    tile is mostly zero padding; the old kernel's thr=0 path selected the
+    ENTIRE tile (padding included) and emitted +scale on every padded lane.
+    Pin: the kernel equals the unpadded oracle and the padding region of the
+    padded buffer stays identically zero, on both legs."""
+    for d in (1, 1023, 1025, 2500, 3089):
+        flat = jax.random.normal(jax.random.PRNGKey(d), (d,))
+        nb = max(1, -(-d // BLOCK))
+        k_b = 50 if d > 64 else 1
+        xb = jnp.pad(flat, (0, nb * BLOCK - d)).reshape(nb, BLOCK)
+        for leg in LEGS:
+            q, _, _ = sign_topk_blocks(xb, jnp.zeros_like(xb),
+                                       jnp.float32(1.0), k_b, lowering=leg)
+            q = q.reshape(-1)
+            assert not np.any(np.asarray(q[d:])), \
+                f"padding emitted nonzeros at d={d} leg={leg}"
+            # tail-tile support comes only from real entries
+            tail = q[(nb - 1) * BLOCK:]
+            real = min(d - (nb - 1) * BLOCK, BLOCK)
+            assert int(jnp.sum(tail != 0)) <= min(k_b, real)
+
+
+def test_trigger_zero_is_exact_identity():
+    """trig = 0 must make q EXACTLY zero and x_hat_new EXACTLY x_hat (not
+    approximately — the event-trigger contract is a bit-level no-op)."""
+    for d in (BLOCK, 2500):
+        x = jax.random.normal(jax.random.PRNGKey(d), (d,))
+        xe = 0.5 * x
+        for leg in LEGS:
+            q, xn, trig = ops.trigger_compress_update(
+                x, xe, jnp.float32(1e12), 64, lowering=leg)
+            assert float(trig) == 0.0
+            assert not np.any(np.asarray(q))
+            np.testing.assert_array_equal(np.asarray(xn), np.asarray(xe))
+
+
+def test_all_zero_input_is_silent():
+    """|diff| == 0 everywhere: the zero-lane rule keeps the support empty
+    (no division blowup, no spurious +scale messages)."""
+    xb = jnp.zeros((2, BLOCK))
+    for leg in LEGS:
+        q, xn, sc = sign_topk_blocks(xb, xb, jnp.float32(1.0), 128,
+                                     lowering=leg)
+        assert not np.any(np.asarray(q))
+        assert not np.any(np.asarray(sc))
+        np.testing.assert_array_equal(np.asarray(xn), np.asarray(xb))
+
+
+def test_exact_k_support_matches_top_k():
+    """The selected index set per block equals jax.lax.top_k's (restricted
+    to nonzero lanes): exactly k_b survivors on tie-free draws, and the
+    support is contained in top_k's under ties."""
+    k_b = 37
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, BLOCK))
+    q, _, _ = sign_topk_blocks(x, jnp.zeros_like(x), jnp.float32(1.0), k_b)
+    _, want_idx = jax.lax.top_k(jnp.abs(x), k_b)
+    for r in range(4):
+        got = set(np.flatnonzero(np.asarray(q[r])).tolist())
+        assert got == set(np.asarray(want_idx[r]).tolist())
+
+
+def test_ensemble_matches_per_row_wrapper():
+    """sign_topk_ensemble (ONE dispatch over all nodes' tiles) must be
+    bit-equal to running trigger_compress_update row by row."""
+    n, d = 4, 2 * BLOCK + 300
+    diff = jax.random.normal(jax.random.PRNGKey(9), (n, d))
+    for leg in LEGS:
+        q_ens = ops.sign_topk_ensemble(diff, 13, lowering=leg)
+        assert q_ens.shape == (n, d)
+        for r in range(n):
+            q_row, _, _ = ops.trigger_compress_update(
+                diff[r], jnp.zeros((d,)), jnp.float32(0.0), 13, lowering=leg)
+            np.testing.assert_array_equal(np.asarray(q_ens[r]),
+                                          np.asarray(q_row))
+
+
+def test_legs_bit_equal_bf16_ragged():
+    """bf16 + irregular length + both legs: the f32-internal contract keeps
+    interpret and xla bit-identical even when storage is bf16."""
+    d = 3089
+    x = jax.random.normal(jax.random.PRNGKey(21), (d,), jnp.bfloat16)
+    outs = [ops.sign_topk(x, 200, lowering=leg) for leg in LEGS]
+    for a, b in zip(outs[0], outs[1], strict=True):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
